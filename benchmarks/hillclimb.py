@@ -1,0 +1,81 @@
+"""Perf hillclimb driver (§Perf): re-analyse a (arch × shape) dry-run under
+config treatments and print the roofline-term deltas vs the baseline.
+
+  PYTHONPATH=src python -m benchmarks.hillclimb --arch gemma3-12b \
+      --shape train_4k --treat loss_chunk=512 remat_policy=dots
+
+Treatments are ``field=value`` pairs applied with ``dataclasses.replace``
+(nested fields via dots: ``moe.capacity_factor=1.0``).  The script prints a
+before/after table of the three roofline terms — the artifact EXPERIMENTS.md
+§Perf records per iteration.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import dataclasses
+import json
+import sys
+
+
+def apply_treatments(cfg, pairs: list[str]):
+    for pair in pairs:
+        field, _, raw = pair.partition("=")
+        try:
+            val = json.loads(raw)
+        except json.JSONDecodeError:
+            val = raw
+        if "." in field:
+            outer, inner = field.split(".", 1)
+            sub = getattr(cfg, outer)
+            cfg = dataclasses.replace(
+                cfg, **{outer: dataclasses.replace(sub, **{inner: val})})
+        else:
+            cfg = dataclasses.replace(cfg, **{field: val})
+    return cfg
+
+
+def fmt_row(r):
+    return (f"{r['label']:24s} c={r['compute_s']:10.4f} m={r['memory_s']:10.4f} "
+            f"coll={r['collective_s']:10.4f} dom={r['dominant']:12s} "
+            f"useful={r['useful_flops_ratio'] or 0:.3f}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--treat", nargs="*", default=[],
+                    help="field=value pairs (json-parsed values)")
+    ap.add_argument("--label", default=None)
+    ap.add_argument("--json", default=None, help="append result rows here")
+    ap.add_argument("--skip-baseline", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.launch.dryrun import analyse
+
+    rows = []
+    if not args.skip_baseline:
+        rows.append(analyse(args.arch, args.shape, verbose=False,
+                            label="baseline"))
+        print(fmt_row(rows[-1]), flush=True)
+    if args.treat:
+        label = args.label or "+".join(args.treat)
+        rows.append(analyse(
+            args.arch, args.shape, verbose=False, label=label,
+            cfg_transform=lambda c: apply_treatments(c, args.treat)))
+        print(fmt_row(rows[-1]), flush=True)
+        if not args.skip_baseline:
+            b, t = rows[0], rows[1]
+            for k in ("compute_s", "memory_s", "collective_s"):
+                d = (t[k] - b[k]) / b[k] * 100 if b[k] else float("nan")
+                print(f"  Δ{k}: {d:+.1f}%")
+    if args.json:
+        with open(args.json, "a") as f:
+            for r in rows:
+                f.write(json.dumps(r, default=str) + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,78 @@
+"""HLO structural profile for the hillclimb: where do the bytes/flops go?
+
+  PYTHONPATH=src python -m benchmarks.hlo_profile --arch gemma3-12b \
+      --shape train_4k [--treat loss_chunk=512] [--top 20]
+
+Groups the optimized post-SPMD HLO by opcode, summing output-shape bytes —
+the dry-run's "profile" stand-in (no wall-clock on CPU): dominant opcodes,
+biggest single tensors, and the collective schedule.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import re
+import sys
+from collections import defaultdict
+
+
+def profile_text(hlo: str, top: int = 20) -> str:
+    from repro.launch.dryrun import _DEF_RE, _shape_bytes
+
+    by_op_bytes: dict[str, int] = defaultdict(int)
+    by_op_count: dict[str, int] = defaultdict(int)
+    tensors: list[tuple[int, str, str]] = []
+    for line in hlo.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, shape, op = m.group(1), m.group(2), m.group(3)
+        nbytes = _shape_bytes(shape)
+        by_op_bytes[op] += nbytes
+        by_op_count[op] += 1
+        if nbytes > 0:
+            tensors.append((nbytes, op, shape[:70]))
+    out = ["== output bytes by opcode =="]
+    for op, b in sorted(by_op_bytes.items(), key=lambda kv: -kv[1])[:top]:
+        out.append(f"{op:28s} {b/1e9:12.3f} GB   ×{by_op_count[op]}")
+    out.append("\n== largest single tensors ==")
+    seen = set()
+    for b, op, shape in sorted(tensors, reverse=True)[:top]:
+        key = (op, shape)
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(f"{b/1e9:10.3f} GB  {op:20s} {shape}")
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--treat", nargs="*", default=[])
+    ap.add_argument("--top", type=int, default=20)
+    ap.add_argument("--no-compile", action="store_true",
+                    help="profile the pre-optimization lowered HLO (faster)")
+    args = ap.parse_args(argv)
+
+    from benchmarks.hillclimb import apply_treatments
+    from repro.launch.dryrun import (INPUT_SHAPES, collective_bytes,
+                                     lower_combo, resolve_config)
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = resolve_config(args.arch, INPUT_SHAPES[args.shape])
+    if args.treat:
+        cfg = apply_treatments(cfg, args.treat)
+    mesh = make_production_mesh()
+    lowered = lower_combo(cfg, args.shape, mesh)
+    hlo = lowered.as_text() if args.no_compile else lowered.compile().as_text()
+    print(profile_text(hlo, args.top))
+    print("\n== collective bytes ==")
+    for k, v in collective_bytes(hlo).items():
+        print(f"{k:22s} {v/1e9:10.3f} GB")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,56 @@
+"""Kernel micro-benchmarks: fused virtual pathway vs unfused jnp path.
+
+On CPU the Pallas kernel runs in interpret mode (slow), so the relevant
+number is the *jnp-path* timing plus the HBM-traffic model: the fused kernel
+eliminates the (N, C, hidden) message round-trip.  We report both timings and
+the modelled bytes saved.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core.virtual_nodes import (VirtualState, init_virtual_block,
+                                      real_from_virtual, virtual_global_message,
+                                      virtual_messages, virtual_node_sums)
+
+
+def run(quick: bool = True):
+    sizes = [(4096, 3, 64)] if quick else [(4096, 3, 64), (16384, 5, 64),
+                                           (65536, 10, 64)]
+    for n, c, hid in sizes:
+        ks = jax.random.split(jax.random.PRNGKey(0), 6)
+        x = jax.random.normal(ks[0], (n, 3))
+        h = jax.random.normal(ks[1], (n, hid))
+        z = jax.random.normal(ks[2], (c, 3))
+        s = jax.random.normal(ks[3], (c, hid))
+        mask = jnp.ones((n,))
+        vb = init_virtual_block(ks[4], c, hid, hid, hid)
+        vs = VirtualState(z=z, s=s)
+        mv = virtual_global_message(z, x.mean(0))
+
+        @jax.jit
+        def unfused(vb, h, x):
+            msgs = virtual_messages(vb, h, x, vs, mv)
+            dx, mh = real_from_virtual(vb, x, vs, msgs)
+            dz, ms = virtual_node_sums(vb, x, vs, msgs, mask)
+            return dx, mh, dz, ms
+
+        out = unfused(vb, h, x)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        for _ in range(5):
+            jax.block_until_ready(unfused(vb, h, x))
+        t_unfused = (time.perf_counter() - t0) / 5 * 1e6
+
+        msg_bytes = n * c * hid * 4 * 2  # write+read of the message tensor
+        emit(f"kernel/virtual_pathway_n{n}_c{c}", t_unfused,
+             f"fused_hbm_saving_bytes={msg_bytes};"
+             f"arithmetic_intensity_gain={c*hid}x")
+
+
+if __name__ == "__main__":
+    run(quick=False)

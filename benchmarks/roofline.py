@@ -1,0 +1,37 @@
+"""Roofline report: renders EXPERIMENTS.md §Roofline from dry-run JSONL.
+
+  PYTHONPATH=src python -m benchmarks.roofline --jsonl results/dryrun.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def render(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | MODEL_FLOPs | useful ratio |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | ERROR: {r['error'][:60]} | | | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['compute_s']:.4g} | "
+            f"{r['memory_s']:.4g} | {r['collective_s']:.4g} | "
+            f"{r['dominant'].replace('_s','')} | {r['model_flops']:.3g} | "
+            f"{(r['useful_flops_ratio'] or 0):.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jsonl", required=True)
+    args = ap.parse_args()
+    rows = [json.loads(l) for l in open(args.jsonl) if l.strip()]
+    print(render(rows))
+
+
+if __name__ == "__main__":
+    main()

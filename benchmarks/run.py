@@ -1,0 +1,52 @@
+"""Benchmark aggregator — one function per paper table.
+
+Prints ``name,us_per_call,derived`` CSV.  Default = quick mode (CPU-sized);
+pass --full for the paper-scale sweeps.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset of: table1 table2 table3 table45 table6 "
+                         "table7 rollout kernel")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (kernel_bench, rollout, table1_fastegnn,
+                            table2_ablations, table3_plugins, table6_partition,
+                            table7_dynamic_radius, table45_distributed)
+
+    jobs = {
+        "table1": lambda: table1_fastegnn.run(quick=quick,
+                                              datasets=("nbody",) if quick
+                                              else ("nbody", "protein", "fluid")),
+        "table2": lambda: table2_ablations.run(quick=quick),
+        "table3": lambda: table3_plugins.run(quick=quick),
+        "table45": lambda: table45_distributed.run(quick=quick),
+        "table6": lambda: table6_partition.run(quick=quick),
+        "table7": lambda: table7_dynamic_radius.run(quick=quick),
+        "rollout": lambda: rollout.run(quick=quick),
+        "kernel": lambda: kernel_bench.run(quick=quick),
+    }
+    selected = args.only or list(jobs)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in selected:
+        try:
+            jobs[name]()
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},0.0,ERROR", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

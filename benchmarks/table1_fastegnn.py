@@ -1,0 +1,48 @@
+"""Table I: FastEGNN vs baselines on N-body / Protein / Water-like fluid.
+
+Scaled-down protocol (CPU): fewer samples/epochs, same relative comparisons:
+MSE + relative inference time vs EGNN, sweeping (C, p).
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import emit, get_dataset, train_and_eval
+
+
+def run(quick: bool = True, datasets=("nbody",)):
+    n_samples = 64 if quick else 160
+    epochs = 40 if quick else 60
+    emit("table1/meta", 0.0, f"mode={'quick' if quick else 'full'}")
+    for ds in datasets:
+        n_nodes = {"nbody": 40, "protein": 96, "fluid": 220}[ds]
+        data, r, h_in = get_dataset(ds, n_samples, n_nodes)
+        baselines = ["linear", "egnn"] if quick else [
+            "linear", "mpnn", "schnet", "rf", "tfn", "egnn"]
+        results = {}
+        for m in baselines:
+            mse, t = train_and_eval(m, data, r, h_in, epochs=epochs)
+            results[m] = (mse, t)
+        egnn_t = results["egnn"][1]
+        for m, (mse, t) in results.items():
+            emit(f"table1/{ds}/{m}", t, f"mse={mse:.5f};rel_time={t/egnn_t:.2f}")
+        # EGNN* (all edges dropped)
+        mse, t = train_and_eval("egnn", data, r, h_in, drop_rate=1.0, epochs=epochs)
+        emit(f"table1/{ds}/egnn_star", t, f"mse={mse:.5f};rel_time={t/egnn_t:.2f}")
+        # FastEGNN-<C, p>
+        cs = [3] if quick else [1, 3, 10]
+        ps = [0.0, 1.0] if quick else [0.0, 0.75, 1.0]
+        for c in cs:
+            for p in ps:
+                mse, t = train_and_eval("fast_egnn", data, r, h_in, drop_rate=p,
+                                        n_virtual=c, lam_mmd=0.03, epochs=epochs)
+                emit(f"table1/{ds}/fast_egnn_c{c}_p{p:.2f}", t,
+                     f"mse={mse:.5f};rel_time={t/egnn_t:.2f}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--datasets", nargs="+", default=["nbody", "protein", "fluid"])
+    a = ap.parse_args()
+    run(quick=not a.full, datasets=tuple(a.datasets))

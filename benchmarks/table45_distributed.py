@@ -1,0 +1,90 @@
+"""Tables IV/V: DistEGNN scaling over device counts (fixed cutoff radius).
+
+Each device count runs in a subprocess with forced host devices.  On this
+CPU container all 'devices' share one socket, so *wall-clock speedup is not
+meaningful*; we report the paper's mechanism numbers instead: per-device edge
+count / average degree under partitioning, per-device peak working set, MSE
+after a short training run, plus the measured per-step time for reference.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from benchmarks.common import emit
+
+_CHILD = """
+import json, time, jax, numpy as np
+from repro.data.fluid import generate_fluid_dataset
+from repro.data.partition import partition_sample
+from repro.distributed.dist_egnn import (make_gnn_mesh, stack_partitions,
+                                         build_dist_train_step, build_dist_apply)
+from repro.models.fast_egnn import FastEGNNConfig, init_fast_egnn
+from repro.training.optim import Adam
+
+D = {d}
+C = {c}
+data = generate_fluid_dataset({n_samples}, n_particles={n_nodes}, seed=0)
+pgs_all = [[partition_sample(s.x0, s.v0, s.h, s.x1, d=D, r={r}, seed=j)
+            for j, s in enumerate(data[i:i+{batch}])]
+           for i in range(0, len(data) - {batch} + 1, {batch})]
+batches = [stack_partitions(p) for p in pgs_all]
+edges = float(np.mean([b.edge_mask.sum() / D for b in batches]))
+deg = edges / (data[0].x0.shape[0] / D)
+cfg = FastEGNNConfig(n_layers=3, hidden=32, h_in=1, n_virtual=C, s_dim=32)
+params = init_fast_egnn(jax.random.PRNGKey(0), cfg)
+mesh = make_gnn_mesh(D)
+opt = Adam(lr=5e-4)
+step, loss_fn = build_dist_train_step(cfg, mesh, opt, lam_mmd=0.01)
+st = opt.init(params)
+step(params, st, batches[0])  # compile
+t0 = time.perf_counter()
+p = params
+for _ in range({epochs}):
+    for b in batches:
+        p, st, loss = step(p, st, b)
+t_step = (time.perf_counter() - t0) / ({epochs} * len(batches))
+# eval MSE on held-out
+val = generate_fluid_dataset(4, n_particles={n_nodes}, seed=99)
+vb = stack_partitions([partition_sample(s.x0, s.v0, s.h, s.x1, d=D, r={r}, seed=j)
+                       for j, s in enumerate(val)])
+apply_fn = build_dist_apply(cfg, mesh)
+xp, _ = apply_fn(p, vb)
+import jax.numpy as jnp
+err = jnp.sum(jnp.sum((xp - vb.x_target) ** 2, -1) * vb.node_mask) / jnp.sum(vb.node_mask) / 3
+work_set = sum(int(np.prod(a.shape[1:])) * 4 for a in batches[0]) // D
+print(json.dumps(dict(d=D, edges_per_dev=edges, avg_degree=deg,
+                      mse=float(err), step_s=t_step, workset_bytes=work_set)))
+"""
+
+
+def run(quick: bool = True):
+    n_nodes = 240 if quick else 800
+    n_samples = 12 if quick else 32
+    epochs = 6 if quick else 20
+    devices = [1, 2, 4] if quick else [1, 2, 3, 4, 8]
+    for d in devices:
+        code = _CHILD.format(d=d, c=3, n_samples=n_samples, n_nodes=n_nodes,
+                             batch=4, r=0.05, epochs=epochs)
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={d}"
+        env["PYTHONPATH"] = "src"
+        out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                             capture_output=True, text=True, env=env, cwd=".")
+        if out.returncode != 0:
+            emit(f"table45/dist_egnn_d{d}", 0.0, f"ERROR:{out.stderr[-200:]}")
+            continue
+        res = json.loads(out.stdout.strip().splitlines()[-1])
+        emit(f"table45/dist_egnn_d{d}", res["step_s"] * 1e6,
+             f"mse={res['mse']:.5f};edges_per_dev={res['edges_per_dev']:.0f};"
+             f"avg_degree={res['avg_degree']:.2f};workset_B={res['workset_bytes']}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    run(quick=not ap.parse_args().full)

@@ -1,0 +1,33 @@
+"""Table VII: dynamic cutoff radius — growing r on partitioned graphs until
+the local edge count matches the single-device graph."""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from benchmarks.common import emit, get_dataset
+from repro.data.partition import dynamic_radius, random_partition
+from repro.data.radius_graph import radius_graph
+
+
+def run(quick: bool = True):
+    data, r0, _ = get_dataset("fluid", 2, 240 if quick else 800)
+    s = data[0]
+    snd, _ = radius_graph(s.x0, r0)
+    target = snd.size
+    n = s.x0.shape[0]
+    for d in ([2, 4] if quick else [2, 3, 4, 8]):
+        assign = random_partition(np.random.default_rng(0), n, d)
+        r_dyn = dynamic_radius(s.x0, assign, d, r0, target, step=0.002)
+        fixed_edges = sum(radius_graph(s.x0[assign == p], r0)[0].size for p in range(d))
+        dyn_edges = sum(radius_graph(s.x0[assign == p], r_dyn)[0].size for p in range(d))
+        emit(f"table7/d{d}", 0.0,
+             f"r_fixed={r0};r_dyn={r_dyn:.3f};edges_fixed={fixed_edges};"
+             f"edges_dyn={dyn_edges};edges_target={target}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    run(quick=not ap.parse_args().full)

@@ -1,0 +1,45 @@
+"""Quickstart: train FastEGNN on a charged N-body system and compare it with
+EGNN under edge dropping — the paper's headline result in 2 minutes on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.data.loader import dataset_to_batches
+from repro.data.nbody import generate_nbody_dataset
+from repro.models.registry import make_model
+from repro.training.trainer import TrainConfig, fit
+
+
+def main():
+    print("generating N-body trajectories (Coulomb, leapfrog)...")
+    data = generate_nbody_dataset(48, n_nodes=40)
+    split = 36
+
+    results = {}
+    for model, name, drop, kw in [
+        ("egnn", "egnn", 0.0, dict(h_in=1, n_layers=3, hidden=32)),
+        ("egnn", "egnn*  (all edges dropped)", 1.0,
+         dict(h_in=1, n_layers=3, hidden=32)),
+        ("fast_egnn", "fast_egnn-3 (all edges dropped)", 1.0,
+         dict(h_in=1, n_layers=3, hidden=32, n_virtual=3, s_dim=32)),
+    ]:
+        tr = dataset_to_batches(data[:split], 6, drop_rate=drop)
+        va = dataset_to_batches(data[split:], 6, drop_rate=drop)
+        cfg, params, apply_full = make_model(model, jax.random.PRNGKey(0), **kw)
+        # scaled-down protocol: hotter lr + tight clip for the short budget
+        # (matches benchmarks/common.py)
+        tc = TrainConfig(lr=1e-3, grad_clip=1.0, epochs=40,
+                         lam_mmd=0.03 if model == "fast_egnn" else 0.0)
+        res = fit(apply_full, cfg, params, tr, va, tc)
+        results[name] = res.best_val
+        print(f"{name:36s} val MSE {res.best_val:.5f}  ({res.wall_time:.0f}s)")
+
+    print("\npaper claim (Table I): virtual nodes keep accuracy when edges "
+          "are dropped, while EGNN* collapses —")
+    ok = results["fast_egnn-3 (all edges dropped)"] < results["egnn*  (all edges dropped)"]
+    print("reproduced!" if ok else "NOT reproduced (try more epochs)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""End-to-end driver: train a ~100M-parameter member of the assigned pool
+(xLSTM-125M, full config) for a few hundred steps on synthetic token streams.
+
+    PYTHONPATH=src python examples/train_lm_100m.py [--steps 200]
+
+This is the ``train ~100M model for a few hundred steps`` deliverable — the
+full-size configs of the larger archs are exercised via the dry-run instead.
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.archs.model import init_arch
+from repro.configs import get_arch
+from repro.training.checkpoint import restore_checkpoint, save_checkpoint
+from repro.training.lm import make_train_step
+from repro.training.optim import Adam, cosine_schedule
+
+
+def synthetic_stream(key, batch, seq, vocab):
+    """Order-2 markov-ish stream: enough structure that NLL << log(V)."""
+    base = jax.random.randint(key, (batch, seq + 1), 0, vocab)
+    rolled = (base[:, :-1] * 31 + jnp.roll(base[:, :-1], 1, axis=1) * 7 + 11) % vocab
+    toks = base.at[:, 1:].set(rolled)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--checkpoint", default="/tmp/xlstm125m.npz")
+    args = ap.parse_args()
+
+    cfg = get_arch("xlstm-125m")  # FULL config: 12 layers, d=768
+    params = init_arch(jax.random.PRNGKey(0), cfg)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"{cfg.name}: {n/1e6:.1f}M params, blocks={cfg.blocks}")
+
+    opt = Adam(lr=cosine_schedule(3e-4, 20, args.steps), grad_clip=1.0)
+    st = opt.init(params)
+    step = jax.jit(make_train_step(cfg, opt))
+    key = jax.random.PRNGKey(1)
+    vocab = min(cfg.vocab, 1024)
+
+    t0 = time.time()
+    for i in range(args.steps):
+        key, sub = jax.random.split(key)
+        batch = synthetic_stream(sub, args.batch, args.seq, vocab)
+        params, st, m = step(params, st, batch)
+        if i % 20 == 0 or i == args.steps - 1:
+            tok_s = args.batch * args.seq * (i + 1) / (time.time() - t0)
+            print(f"step {i:4d}  nll {float(m['nll']):.4f}  "
+                  f"({tok_s:.0f} tok/s)", flush=True)
+    save_checkpoint(args.checkpoint, params, {"arch": cfg.name, "steps": args.steps})
+    restored, meta = restore_checkpoint(args.checkpoint, params)
+    assert meta["steps"] == args.steps
+    print(f"checkpoint round-trip OK → {args.checkpoint}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,473 @@
+"""Config-driven model builder for the assigned architecture pool.
+
+One functional implementation covers all 10 architectures: a decoder stack
+whose per-layer block kind comes from ``ArchConfig.blocks`` (GQA / SWA / MLA /
+Mamba2 / mLSTM / sLSTM / shared block), per-layer FFN kind from
+``ArchConfig.ffns`` (SwiGLU / GeGLU / MoE / none), an optional bidirectional
+audio encoder (whisper), optional cross-attention layers (whisper decoder,
+llama-vision), and the optional virtual-token pathway (the paper's technique).
+
+Three entry points:
+  ``forward``      — training / prefill: tokens (B, S) → logits (B, S, V)
+  ``init_cache``   — decode caches for every layer kind (+ encoder stub out)
+  ``decode_step``  — one-token serve step with cache update
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.archs.config import (
+    ATTN, FFN_GEGLU, FFN_MOE, FFN_NONE, FFN_SWIGLU, MAMBA2, MLA, MLSTM,
+    SHARED_ATTN, SLSTM, SWA, ArchConfig,
+)
+from repro.nn import attention as attn
+from repro.nn import moe as moe_lib
+from repro.nn import ssm as ssm_lib
+from repro.nn import xlstm as xlstm_lib
+from repro.nn.basic import (dense_init, init_geglu, init_rmsnorm, init_swiglu,
+                            geglu, rmsnorm, swiglu)
+from repro.nn.virtual_tokens import (init_virtual_tokens, init_vt_state,
+                                     virtual_token_layer)
+
+Array = jax.Array
+
+
+# ----------------------------------------------------------------- helpers
+def cast_params(params, dtype):
+    """fp32 master weights → compute dtype (the bf16 copy XLA fuses away)."""
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if a.dtype == jnp.float32 else a, params)
+
+
+def _mamba_dims(cfg: ArchConfig) -> ssm_lib.Mamba2Dims:
+    return ssm_lib.mamba2_dims(cfg.d_model, d_state=cfg.ssm.d_state,
+                               head_dim=cfg.ssm.head_dim, expand=cfg.ssm.expand)
+
+
+def _xlstm_dims(cfg: ArchConfig) -> xlstm_lib.XLSTMDims:
+    return xlstm_lib.xlstm_dims(cfg.d_model, cfg.n_heads)
+
+
+# -------------------------------------------------------------------- init
+def _init_ffn(key, cfg: ArchConfig, kind: str):
+    if kind == FFN_SWIGLU:
+        return init_swiglu(key, cfg.d_model, cfg.d_ff)
+    if kind == FFN_GEGLU:
+        return init_geglu(key, cfg.d_model, cfg.d_ff)
+    if kind == FFN_MOE:
+        m = cfg.moe
+        return moe_lib.init_moe(key, cfg.d_model, m.d_expert_ff, m.n_experts,
+                                m.top_k, m.n_shared, m.d_shared_ff)
+    return None
+
+
+def _init_layer(key, cfg: ArchConfig, i: int):
+    kind = cfg.block_kind(i)
+    ks = jax.random.split(key, 6)
+    p: dict[str, Any] = {}
+    if kind in (ATTN, SWA):
+        p["norm1"] = init_rmsnorm(cfg.d_model)
+        p["attn"] = attn.init_gqa(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                  cfg.head_dim)
+    elif kind == MLA:
+        m = cfg.mla
+        p["norm1"] = init_rmsnorm(cfg.d_model)
+        p["attn"] = attn.init_mla(ks[0], cfg.d_model, cfg.n_heads, kv_lora=m.kv_lora,
+                                  d_nope=m.d_nope, d_rope=m.d_rope, d_v=m.d_v)
+    elif kind == MAMBA2:
+        p["norm1"] = init_rmsnorm(cfg.d_model)
+        p["mixer"] = ssm_lib.init_mamba2(ks[0], _mamba_dims(cfg))
+    elif kind == MLSTM:
+        p["norm1"] = init_rmsnorm(cfg.d_model)
+        p["mixer"] = xlstm_lib.init_mlstm(ks[0], _xlstm_dims(cfg))
+    elif kind == SLSTM:
+        p["norm1"] = init_rmsnorm(cfg.d_model)
+        p["mixer"] = xlstm_lib.init_slstm(ks[0], _xlstm_dims(cfg))
+    elif kind == SHARED_ATTN:
+        # per-invocation input projection; attention/FFN weights are shared
+        p["norm1"] = init_rmsnorm(2 * cfg.d_model)
+        p["in_proj"] = dense_init(ks[0], 2 * cfg.d_model, cfg.d_model)
+    else:
+        raise ValueError(kind)
+    if cfg.has_cross(i):
+        p["norm_x"] = init_rmsnorm(cfg.d_model)
+        p["cross"] = attn.init_gqa(ks[1], cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.head_dim)
+    fk = cfg.ffns[i]
+    if fk != FFN_NONE:
+        p["norm2"] = init_rmsnorm(cfg.d_model)
+        p["ffn"] = _init_ffn(ks[2], cfg, fk)
+    return p
+
+
+def init_arch(key, cfg: ArchConfig):
+    ks = jax.random.split(key, cfg.n_layers + 6)
+    params: dict[str, Any] = {
+        "embed": 0.02 * jax.random.normal(ks[0], (cfg.vocab, cfg.d_model), jnp.float32),
+        "final_norm": init_rmsnorm(cfg.d_model),
+        "layers": [_init_layer(ks[2 + i], cfg, i) for i in range(cfg.n_layers)],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[1], cfg.d_model, cfg.vocab, 0.02)
+    if SHARED_ATTN in cfg.blocks:
+        kk = jax.random.split(ks[-1], 3)
+        params["shared_block"] = {
+            "attn": attn.init_gqa(kk[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                  cfg.head_dim),
+            "norm2": init_rmsnorm(cfg.d_model),
+            "ffn": init_swiglu(kk[1], cfg.d_model, cfg.d_ff or 4 * cfg.d_model),
+        }
+    if cfg.has_encoder:
+        ek = jax.random.split(ks[-2], cfg.encoder_layers + 1)
+        params["encoder"] = {
+            "layers": [
+                {
+                    "norm1": init_rmsnorm(cfg.d_model),
+                    "attn": attn.init_gqa(ek[i], cfg.d_model, cfg.n_heads,
+                                          cfg.n_kv_heads, cfg.head_dim),
+                    "norm2": init_rmsnorm(cfg.d_model),
+                    "ffn": init_swiglu(jax.random.fold_in(ek[i], 1), cfg.d_model,
+                                       cfg.d_ff or 4 * cfg.d_model),
+                }
+                for i in range(cfg.encoder_layers)
+            ],
+            "final_norm": init_rmsnorm(cfg.d_model),
+        }
+    if cfg.n_virtual_tokens > 0:
+        vk = jax.random.split(ks[-3], cfg.n_layers)
+        params["vt"] = [
+            init_virtual_tokens(vk[i], cfg.n_virtual_tokens, cfg.d_model, cfg.d_virtual)
+            for i in range(cfg.n_layers)
+        ]
+    return params
+
+
+# ----------------------------------------------------------------- encoder
+def encode_audio(params, cfg: ArchConfig, frames: Array, dtype=jnp.bfloat16) -> Array:
+    """Whisper-style bidirectional encoder over precomputed frame embeddings
+    (the conv/mel frontend is the stubbed modality input — DESIGN.md §5)."""
+    params = cast_params(params, dtype)
+    x = frames.astype(dtype)
+    pos = jnp.arange(x.shape[1])
+    for lp in params["encoder"]["layers"]:
+        h = rmsnorm(lp["norm1"], x)
+        x = x + attn.gqa_forward(lp["attn"], h, pos, n_heads=cfg.n_heads,
+                                 n_kv=cfg.n_kv_heads, d_head=cfg.head_dim,
+                                 causal=False, rope_theta=cfg.rope_theta,
+                                 q_chunk=cfg.q_chunk)
+        h = rmsnorm(lp["norm2"], x)
+        x = x + swiglu(lp["ffn"], h)
+    return rmsnorm(params["encoder"]["final_norm"], x)
+
+
+# ----------------------------------------------------------------- forward
+def _scan_plan(cfg: ArchConfig) -> Optional[tuple[int, int, int]]:
+    """Detect the repeating layer pattern for scan-over-layers.
+
+    Returns (prefix, period, n_groups): layers [prefix, prefix+period·groups)
+    are executed as a ``lax.scan`` over stacked parameter groups (one compiled
+    group body instead of n_layers inlined copies — MaxText-style compile-time
+    and HLO-size reduction); the prefix/remainder layers stay unrolled.
+    """
+    L = cfg.n_layers
+    classes = [(cfg.blocks[i], cfg.ffns[i], cfg.has_cross(i)) for i in range(L)]
+    best = None  # (n_unrolled, period, prefix, n_groups)
+    for p in range(1, min(8, L) + 1):
+        v = 0
+        for i in range(L - 1, p - 1, -1):
+            if classes[i] != classes[i - p]:
+                v = i - p + 1
+                break
+        g = (L - v) // p
+        if g < 2:
+            continue
+        cand = (v + (L - v - g * p), p, v, g)
+        if best is None or cand[:2] < best[:2]:
+            best = cand
+    if best is None:
+        return None
+    _, p, v, g = best
+    return (v, p, g)
+
+
+def _ffn_apply(lp, cfg: ArchConfig, kind: str, x: Array) -> tuple[Array, Array]:
+    aux = jnp.zeros((), jnp.float32)
+    if kind == FFN_SWIGLU:
+        return swiglu(lp["ffn"], x), aux
+    if kind == FFN_GEGLU:
+        return geglu(lp["ffn"], x), aux
+    if kind == FFN_MOE:
+        m = cfg.moe
+        out, aux = moe_lib.moe_ffn(lp["ffn"], x, n_experts=m.n_experts, top_k=m.top_k,
+                                   capacity_factor=m.capacity_factor,
+                                   grouped=cfg.moe_grouped)
+        return out, aux
+    return jnp.zeros_like(x), aux
+
+
+def _layer_forward(params, lp, cfg: ArchConfig, i: int, x: Array, x0: Array,
+                   positions: Array, enc_out: Optional[Array]):
+    kind = cfg.block_kind(i)
+    aux = jnp.zeros((), jnp.float32)
+    if kind in (ATTN, SWA):
+        h = rmsnorm(lp["norm1"], x)
+        x = x + attn.gqa_forward(
+            lp["attn"], h, positions, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            d_head=cfg.head_dim, window=cfg.window if kind == SWA else None,
+            rope_theta=cfg.rope_theta, q_chunk=cfg.q_chunk)
+    elif kind == MLA:
+        m = cfg.mla
+        h = rmsnorm(lp["norm1"], x)
+        x = x + attn.mla_forward(lp["attn"], h, positions, n_heads=cfg.n_heads,
+                                 kv_lora=m.kv_lora, d_nope=m.d_nope, d_rope=m.d_rope,
+                                 d_v=m.d_v, rope_theta=cfg.rope_theta,
+                                 q_chunk=cfg.q_chunk)
+    elif kind == MAMBA2:
+        h = rmsnorm(lp["norm1"], x)
+        x = x + ssm_lib.mamba2_forward(lp["mixer"], h, _mamba_dims(cfg), cfg.ssd_chunk)
+    elif kind == MLSTM:
+        h = rmsnorm(lp["norm1"], x)
+        x = x + xlstm_lib.mlstm_forward(lp["mixer"], h, _xlstm_dims(cfg))
+    elif kind == SLSTM:
+        h = rmsnorm(lp["norm1"], x)
+        x = x + xlstm_lib.slstm_forward(lp["mixer"], h)
+    elif kind == SHARED_ATTN:
+        sb = params["shared_block"]
+        h = rmsnorm(lp["norm1"], jnp.concatenate([x, x0], axis=-1)) @ lp["in_proj"]
+        a = attn.gqa_forward(sb["attn"], h, positions, n_heads=cfg.n_heads,
+                             n_kv=cfg.n_kv_heads, d_head=cfg.head_dim,
+                             rope_theta=cfg.rope_theta, q_chunk=cfg.q_chunk)
+        x = x + a + swiglu(sb["ffn"], rmsnorm(sb["norm2"], a))
+    if cfg.has_cross(i) and enc_out is not None:
+        h = rmsnorm(lp["norm_x"], x)
+        x = x + attn.gqa_forward(lp["cross"], h, positions, n_heads=cfg.n_heads,
+                                 n_kv=cfg.n_kv_heads, d_head=cfg.head_dim,
+                                 cross_kv=enc_out, q_chunk=cfg.q_chunk)
+    fk = cfg.ffns[i]
+    if fk != FFN_NONE:
+        h = rmsnorm(lp["norm2"], x)
+        out, aux = _ffn_apply(lp, cfg, fk, h)
+        x = x + out
+    return x, aux
+
+
+def _remat_wrap(fn, cfg: ArchConfig):
+    """Apply the configured activation-checkpoint policy to a layer/group fn.
+
+    ``full``: recompute everything in the backward (lowest memory, +1 fwd of
+    recompute FLOPs); ``dots``: save matmul outputs, recompute the cheap
+    elementwise rest (the §Perf selective-remat treatment); ``none``: save
+    all activations."""
+    if not cfg.remat or cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def forward(
+    params,
+    cfg: ArchConfig,
+    tokens: Array,  # (B, S) int32
+    *,
+    audio: Optional[Array] = None,  # (B, n_audio, d_model)
+    images: Optional[Array] = None,  # (B, n_img, d_model)
+    dtype=jnp.bfloat16,
+    return_hidden: bool = False,
+) -> tuple[Array, Array]:
+    """Returns (logits (B,S,V) in fp32, aux loss scalar); with
+    ``return_hidden`` the pre-head hidden states (B,S,d) in compute dtype
+    instead of logits (the chunked-loss path applies the head itself)."""
+    params = cast_params(params, dtype)
+    b, s = tokens.shape
+    x = params["embed"][tokens] * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    positions = jnp.arange(s)
+    enc_out = None
+    if cfg.has_encoder:
+        assert audio is not None, "whisper backbone needs frame embeddings"
+        enc_out = encode_audio(params, cfg, audio, dtype)
+    elif cfg.cross_attn_every > 0:
+        assert images is not None, "vlm backbone needs patch embeddings"
+        enc_out = images.astype(dtype)
+
+    x0 = x
+    vt = None
+    if cfg.n_virtual_tokens > 0:
+        vt = init_vt_state(params["vt"][0], b).astype(dtype)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def run_layer(i, lp, vtp, x, vt):
+        x, aux = _layer_forward(params, lp, cfg, i, x, x0, positions, enc_out)
+        if vt is not None:
+            x, vt = virtual_token_layer(vtp, x, vt)
+        return x, vt, aux
+
+    def run_unrolled(i, x, vt, aux_total):
+        lp = params["layers"][i]
+        vtp = params["vt"][i] if vt is not None else None
+        x, vt, aux = _remat_wrap(
+            lambda x, vt: run_layer(i, lp, vtp, x, vt), cfg)(x, vt)
+        return x, vt, aux_total + aux
+
+    plan = _scan_plan(cfg) if cfg.scan_layers else None
+    if plan is None:
+        for i in range(cfg.n_layers):
+            x, vt, aux_total = run_unrolled(i, x, vt, aux_total)
+    else:
+        prefix, period, n_groups = plan
+        for i in range(prefix):
+            x, vt, aux_total = run_unrolled(i, x, vt, aux_total)
+        # stack each in-group position's params across groups → scan xs
+        stacked = []
+        for j in range(period):
+            per_group = [params["layers"][prefix + g * period + j]
+                         for g in range(n_groups)]
+            vt_per_group = ([params["vt"][prefix + g * period + j]
+                             for g in range(n_groups)] if vt is not None else None)
+            stacked.append((
+                jax.tree.map(lambda *xs: jnp.stack(xs), *per_group),
+                jax.tree.map(lambda *xs: jnp.stack(xs), *vt_per_group)
+                if vt_per_group is not None else None,
+            ))
+
+        def group_body(carry, xs):
+            x, vt, aux_total = carry
+            for j in range(period):
+                lp, vtp = xs[j]
+                x, vt, aux = run_layer(prefix + j, lp, vtp, x, vt)
+                aux_total = aux_total + aux
+            return (x, vt, aux_total), None
+
+        body = _remat_wrap(group_body, cfg)
+        (x, vt, aux_total), _ = jax.lax.scan(body, (x, vt, aux_total),
+                                             tuple(stacked))
+        for i in range(prefix + period * n_groups, cfg.n_layers):
+            x, vt, aux_total = run_unrolled(i, x, vt, aux_total)
+
+    x = rmsnorm(params["final_norm"], x)
+    if return_hidden:
+        return x, aux_total
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head.astype(dtype)).astype(jnp.float32)
+    return logits, aux_total
+
+
+def lm_head_weights(params, cfg: ArchConfig, dtype=jnp.bfloat16) -> Array:
+    """(d, V) head matrix in compute dtype (tied or separate)."""
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return head.astype(dtype)
+
+
+# ------------------------------------------------------------------ decode
+class DecodeCache(NamedTuple):
+    layers: tuple  # per-layer cache pytree (kind-dependent)
+    vt: Optional[Array]
+    enc_out: Optional[Array]  # encoder states / image embeddings (cross K/V src)
+
+
+def init_cache(cfg: ArchConfig, batch: int, capacity: int, *,
+               enc_out: Optional[Array] = None, dtype=jnp.bfloat16) -> DecodeCache:
+    layers = []
+    for i in range(cfg.n_layers):
+        kind = cfg.block_kind(i)
+        entry: dict[str, Any] = {}
+        if kind in (ATTN, SHARED_ATTN):
+            entry["kv"] = attn.init_kv_cache(batch, capacity, cfg.n_kv_heads,
+                                             cfg.head_dim, dtype)
+        elif kind == SWA:
+            entry["kv"] = attn.init_kv_cache(batch, min(cfg.window, capacity),
+                                             cfg.n_kv_heads, cfg.head_dim, dtype)
+        elif kind == MLA:
+            entry["kv"] = attn.init_mla_cache(batch, capacity, cfg.mla.kv_lora,
+                                              cfg.mla.d_rope, dtype)
+        elif kind == MAMBA2:
+            entry["ssm"] = ssm_lib.init_mamba2_cache(batch, _mamba_dims(cfg))
+        elif kind == MLSTM:
+            entry["ssm"] = xlstm_lib.init_mlstm_state(batch, _xlstm_dims(cfg))
+        elif kind == SLSTM:
+            entry["ssm"] = xlstm_lib.init_slstm_state(batch, cfg.d_model)
+        layers.append(entry)
+    vt = None
+    if cfg.n_virtual_tokens > 0:
+        vt = jnp.zeros((batch, cfg.n_virtual_tokens, cfg.d_virtual), dtype)
+    return DecodeCache(layers=tuple(layers), vt=vt, enc_out=enc_out)
+
+
+def decode_step(
+    params,
+    cfg: ArchConfig,
+    cache: DecodeCache,
+    tokens: Array,  # (B,) int32 — current token
+    pos: Array,  # (B,) int32 — its absolute position
+    *,
+    dtype=jnp.bfloat16,
+) -> tuple[Array, DecodeCache]:
+    """One serve step: next-token logits (B, V) + updated cache."""
+    params = cast_params(params, dtype)
+    b = tokens.shape[0]
+    x = params["embed"][tokens][:, None, :] * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    x0 = x
+    vt = cache.vt
+    new_layers = []
+    for i, lp in enumerate(params["layers"]):
+        kind = cfg.block_kind(i)
+        entry = dict(cache.layers[i])
+        if kind in (ATTN, SWA):
+            h = rmsnorm(lp["norm1"], x)
+            out, entry["kv"] = attn.gqa_decode(
+                lp["attn"], h, entry["kv"], pos, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv_heads, d_head=cfg.head_dim,
+                window=cfg.window if kind == SWA else None,
+                rope_theta=cfg.rope_theta)
+            x = x + out
+        elif kind == MLA:
+            m = cfg.mla
+            h = rmsnorm(lp["norm1"], x)
+            out, entry["kv"] = attn.mla_decode(
+                lp["attn"], h, entry["kv"], pos, n_heads=cfg.n_heads,
+                kv_lora=m.kv_lora, d_nope=m.d_nope, d_rope=m.d_rope, d_v=m.d_v,
+                rope_theta=cfg.rope_theta)
+            x = x + out
+        elif kind == MAMBA2:
+            h = rmsnorm(lp["norm1"], x)
+            out, entry["ssm"] = ssm_lib.mamba2_decode(lp["mixer"], h, entry["ssm"],
+                                                      _mamba_dims(cfg))
+            x = x + out
+        elif kind == MLSTM:
+            h = rmsnorm(lp["norm1"], x)
+            out, entry["ssm"] = xlstm_lib.mlstm_decode(lp["mixer"], h, entry["ssm"],
+                                                       _xlstm_dims(cfg))
+            x = x + out
+        elif kind == SLSTM:
+            h = rmsnorm(lp["norm1"], x)
+            out, entry["ssm"] = xlstm_lib.slstm_decode(lp["mixer"], h, entry["ssm"])
+            x = x + out
+        elif kind == SHARED_ATTN:
+            sb = params["shared_block"]
+            h = rmsnorm(lp["norm1"], jnp.concatenate([x, x0], axis=-1)) @ lp["in_proj"]
+            a, entry["kv"] = attn.gqa_decode(sb["attn"], h, entry["kv"], pos,
+                                             n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                                             d_head=cfg.head_dim,
+                                             rope_theta=cfg.rope_theta)
+            x = x + a + swiglu(sb["ffn"], rmsnorm(sb["norm2"], a))
+        if cfg.has_cross(i) and cache.enc_out is not None:
+            h = rmsnorm(lp["norm_x"], x)
+            x = x + attn.gqa_forward(lp["cross"], h, pos[:1], n_heads=cfg.n_heads,
+                                     n_kv=cfg.n_kv_heads, d_head=cfg.head_dim,
+                                     cross_kv=cache.enc_out, q_chunk=1)
+        fk = cfg.ffns[i]
+        if fk != FFN_NONE:
+            h = rmsnorm(lp["norm2"], x)
+            out, _ = _ffn_apply(lp, cfg, fk, h)
+            x = x + out
+        if vt is not None:
+            x, vt = virtual_token_layer(params["vt"][i], x, vt)
+        new_layers.append(entry)
+    x = rmsnorm(params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x[:, 0] @ head.astype(dtype)).astype(jnp.float32)
+    return logits, DecodeCache(layers=tuple(new_layers), vt=vt, enc_out=cache.enc_out)

@@ -1,0 +1,53 @@
+"""Config registry: ``get_arch(name)`` + the assigned input shapes."""
+from __future__ import annotations
+
+import importlib
+from typing import NamedTuple
+
+from repro.archs.config import ArchConfig
+
+_ARCH_IDS = [
+    "olmoe_1b_7b",
+    "gemma3_12b",
+    "xlstm_125m",
+    "deepseek_v2_lite_16b",
+    "whisper_small",
+    "llama3_405b",
+    "zamba2_1_2b",
+    "llama_3_2_vision_11b",
+    "gemma3_27b",
+    "granite_20b",
+]
+
+# canonical dashed ids (CLI) → module names
+ALIASES = {i.replace("_", "-"): i for i in _ARCH_IDS}
+ALIASES.update({i: i for i in _ARCH_IDS})
+# spec-sheet ids
+ALIASES.update({
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "zamba2-1.2b": "zamba2_1_2b",
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+})
+
+ARCH_NAMES = sorted(ALIASES)
+
+
+def get_arch(name: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{ALIASES[name]}")
+    return mod.CONFIG
+
+
+class InputShape(NamedTuple):
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}

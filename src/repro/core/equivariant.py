@@ -1,0 +1,43 @@
+"""E(3) helpers: random group elements, action on graphs, equivariance checks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def random_rotation(key) -> Array:
+    """Uniform random rotation in SO(3) (QR of a Gaussian, det fixed to +1)."""
+    m = jax.random.normal(key, (3, 3))
+    q, r = jnp.linalg.qr(m)
+    # make R's diagonal positive for a unique QR, then fix determinant
+    d = jnp.sign(jnp.diagonal(r))
+    q = q * d[None, :]
+    det = jnp.linalg.det(q)
+    q = q.at[:, 0].multiply(det)  # reflect one axis if det == -1
+    return q
+
+
+def random_orthogonal(key) -> Array:
+    """Uniform random element of O(3) (rotation or roto-reflection)."""
+    kq, ks = jax.random.split(key)
+    q = random_rotation(kq)
+    s = jnp.where(jax.random.bernoulli(ks), 1.0, -1.0)
+    return q.at[:, 0].multiply(s)
+
+
+def apply_e3(x: Array, rot: Array, trans: Array) -> Array:
+    """x: (..., 3) → x @ R + t."""
+    return x @ rot + trans
+
+
+def apply_o3(x: Array, rot: Array) -> Array:
+    return x @ rot
+
+
+def com(x: Array, mask: Array | None = None) -> Array:
+    if mask is None:
+        return jnp.mean(x, axis=-2)
+    w = mask[..., None]
+    return jnp.sum(x * w, axis=-2) / jnp.maximum(jnp.sum(w, axis=-2), 1.0)

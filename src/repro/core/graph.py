@@ -1,0 +1,115 @@
+"""Geometric graph containers (static-shape, SPMD-friendly).
+
+A geometric graph holds per-node 3D coordinates ``x``, velocities ``v`` and
+invariant features ``h``, plus a padded edge list.  All arrays are fixed-size
+with validity masks so the same jitted program serves every batch element —
+the TPU/SPMD adaptation of the paper's ragged PyG batches (DESIGN.md §6.2).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class GeometricGraph(NamedTuple):
+    """One (possibly padded) geometric graph.
+
+    Shapes (no batch dim; batch via ``jax.vmap``):
+      x:         (N, 3)   float   node coordinates
+      v:         (N, 3)   float   node velocities
+      h:         (N, H)   float   invariant node features
+      senders:   (E,)     int32   edge source indices   (padded w/ 0)
+      receivers: (E,)     int32   edge destination idx  (padded w/ 0)
+      edge_attr: (E, A)   float   optional edge features (A may be 0)
+      node_mask: (N,)     float   1.0 for real nodes, 0.0 for padding
+      edge_mask: (E,)     float   1.0 for real edges, 0.0 for padding
+    """
+
+    x: Array
+    v: Array
+    h: Array
+    senders: Array
+    receivers: Array
+    edge_attr: Array
+    node_mask: Array
+    edge_mask: Array
+
+    @property
+    def n_nodes(self) -> int:
+        return self.x.shape[0]
+
+    @property
+    def n_edges(self) -> int:
+        return self.senders.shape[0]
+
+    @property
+    def feat_dim(self) -> int:
+        return self.h.shape[-1]
+
+    def num_real_nodes(self) -> Array:
+        return jnp.sum(self.node_mask)
+
+    def com(self) -> Array:
+        """Center of mass over *real* nodes: (3,)."""
+        w = self.node_mask[:, None]
+        return jnp.sum(self.x * w, axis=0) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def make_graph(
+    x,
+    v=None,
+    h=None,
+    senders=None,
+    receivers=None,
+    edge_attr=None,
+    node_mask=None,
+    edge_mask=None,
+    feat_dim: int = 1,
+) -> GeometricGraph:
+    """Convenience constructor filling in defaults for missing fields."""
+    x = jnp.asarray(x, jnp.float32)
+    n = x.shape[0]
+    if v is None:
+        v = jnp.zeros_like(x)
+    if h is None:
+        h = jnp.ones((n, feat_dim), jnp.float32)
+    if senders is None:
+        senders = jnp.zeros((0,), jnp.int32)
+    if receivers is None:
+        receivers = jnp.zeros((0,), jnp.int32)
+    senders = jnp.asarray(senders, jnp.int32)
+    receivers = jnp.asarray(receivers, jnp.int32)
+    e = senders.shape[0]
+    if edge_attr is None:
+        edge_attr = jnp.zeros((e, 0), jnp.float32)
+    if node_mask is None:
+        node_mask = jnp.ones((n,), jnp.float32)
+    if edge_mask is None:
+        edge_mask = jnp.ones((e,), jnp.float32)
+    return GeometricGraph(
+        x=x,
+        v=jnp.asarray(v, jnp.float32),
+        h=jnp.asarray(h, jnp.float32),
+        senders=senders,
+        receivers=receivers,
+        edge_attr=jnp.asarray(edge_attr, jnp.float32),
+        node_mask=jnp.asarray(node_mask, jnp.float32),
+        edge_mask=jnp.asarray(edge_mask, jnp.float32),
+    )
+
+
+def segment_mean(data: Array, segment_ids: Array, num_segments: int, weights: Optional[Array] = None) -> Array:
+    """Masked segment mean: sum(data)/count per segment (0 where empty)."""
+    if weights is not None:
+        data = data * weights.reshape((-1,) + (1,) * (data.ndim - 1))
+        ones = weights
+    else:
+        ones = jnp.ones(data.shape[0], data.dtype)
+    tot = jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+    cnt = jax.ops.segment_sum(ones, segment_ids, num_segments=num_segments)
+    cnt = jnp.maximum(cnt, 1.0)
+    return tot / cnt.reshape((-1,) + (1,) * (data.ndim - 1))

@@ -1,0 +1,103 @@
+"""Host-side radius-graph construction, edge dropping, padding (numpy).
+
+Graph building is a data-pipeline step (DESIGN.md §6.3): cell-list radius
+search in O(N), distance-sorted edge dropping (the paper drops the top-p
+*longest* edges, Sec. VII-B), and fixed-capacity padding so the jitted model
+sees static shapes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def radius_graph(x: np.ndarray, r: float, max_num_neighbors: int | None = None) -> tuple[np.ndarray, np.ndarray]:
+    """All directed edges (i→j, i≠j) with ‖x_i−x_j‖ ≤ r.  Cell-list, O(N·deg).
+
+    Returns (senders, receivers) int32 arrays.
+    """
+    n = x.shape[0]
+    if n == 0:
+        return np.zeros(0, np.int32), np.zeros(0, np.int32)
+    if not np.isfinite(r):
+        idx = np.arange(n)
+        snd = np.repeat(idx, n)
+        rcv = np.tile(idx, n)
+        keep = snd != rcv
+        return snd[keep].astype(np.int32), rcv[keep].astype(np.int32)
+
+    cell = np.floor(x / r).astype(np.int64)
+    bucket_of: dict[tuple, np.ndarray] = {}
+    order = np.lexsort((cell[:, 2], cell[:, 1], cell[:, 0]))
+    sc = cell[order]
+    breaks = np.nonzero(np.any(np.diff(sc, axis=0) != 0, axis=1))[0] + 1
+    starts = np.concatenate([[0], breaks, [n]])
+    for b in range(len(starts) - 1):
+        members = order[starts[b] : starts[b + 1]]
+        bucket_of[tuple(sc[starts[b]])] = members
+
+    offsets = np.array(np.meshgrid([-1, 0, 1], [-1, 0, 1], [-1, 0, 1])).T.reshape(-1, 3)
+    snd_list, rcv_list = [], []
+    r2 = r * r
+    for ck, members in bucket_of.items():
+        neigh = []
+        for off in offsets:
+            cand = bucket_of.get((ck[0] + off[0], ck[1] + off[1], ck[2] + off[2]))
+            if cand is not None:
+                neigh.append(cand)
+        neigh = np.concatenate(neigh)
+        d2 = np.sum((x[members][:, None, :] - x[neigh][None, :, :]) ** 2, axis=-1)
+        ii, jj = np.nonzero(d2 <= r2)
+        s = neigh[jj]
+        t = members[ii]
+        keep = s != t
+        snd_list.append(s[keep])
+        rcv_list.append(t[keep])
+    snd = np.concatenate(snd_list) if snd_list else np.zeros(0, np.int64)
+    rcv = np.concatenate(rcv_list) if rcv_list else np.zeros(0, np.int64)
+    if max_num_neighbors is not None and snd.size:
+        # keep nearest max_num_neighbors per receiver
+        d2 = np.sum((x[snd] - x[rcv]) ** 2, axis=-1)
+        order = np.lexsort((d2, rcv))
+        snd, rcv, d2 = snd[order], rcv[order], d2[order]
+        rank = np.arange(rcv.size) - np.searchsorted(rcv, rcv, side="left")
+        keep = rank < max_num_neighbors
+        snd, rcv = snd[keep], rcv[keep]
+    return snd.astype(np.int32), rcv.astype(np.int32)
+
+
+def drop_longest_edges(x: np.ndarray, snd: np.ndarray, rcv: np.ndarray, p: float) -> tuple[np.ndarray, np.ndarray]:
+    """Sec. VII-B edge dropping: sort by length, drop the top-p fraction."""
+    if p <= 0.0 or snd.size == 0:
+        return snd, rcv
+    if p >= 1.0:
+        return snd[:0], rcv[:0]
+    d2 = np.sum((x[snd] - x[rcv]) ** 2, axis=-1)
+    n_keep = int(round((1.0 - p) * snd.size))
+    keep = np.argsort(d2, kind="stable")[:n_keep]
+    return snd[keep], rcv[keep]
+
+
+def pad_edges(snd: np.ndarray, rcv: np.ndarray, capacity: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pad/truncate to ``capacity``; returns (senders, receivers, edge_mask)."""
+    e = snd.size
+    if e > capacity:
+        sel = np.random.default_rng(0).choice(e, capacity, replace=False)
+        snd, rcv, e = snd[sel], rcv[sel], capacity
+    out_s = np.zeros(capacity, np.int32)
+    out_r = np.zeros(capacity, np.int32)
+    mask = np.zeros(capacity, np.float32)
+    out_s[:e] = snd
+    out_r[:e] = rcv
+    mask[:e] = 1.0
+    return out_s, out_r, mask
+
+
+def pad_nodes(arr: np.ndarray, capacity: int, fill: float = 0.0) -> tuple[np.ndarray, np.ndarray]:
+    """Pad node array (N, ...) to (capacity, ...); returns (padded, node_mask)."""
+    n = arr.shape[0]
+    assert n <= capacity, (n, capacity)
+    out = np.full((capacity,) + arr.shape[1:], fill, arr.dtype)
+    out[:n] = arr
+    mask = np.zeros(capacity, np.float32)
+    mask[:n] = 1.0
+    return out, mask

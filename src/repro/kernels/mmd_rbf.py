@@ -1,0 +1,60 @@
+"""MMD RBF cross-term Pallas kernel (Eq. 10's Σ_ic k(x_i, z_c)).
+
+The N×C kernel-matrix sum is the only O(N) part of the MMD loss (the C×C
+virtual-virtual term is negligible).  Grid over node blocks, scalar
+accumulation across the sequential grid — one pass over HBM, nothing written
+back but a single (1,1) accumulator.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _kernel(x_ref, mask_ref, z_ref, out_ref, *, inv_two_sigma2: float):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    xb = x_ref[...]  # (BN, 3)
+    mb = mask_ref[...]  # (BN, 1)
+    z = z_ref[...]  # (C, 3)
+    d2 = (
+        jnp.sum(xb * xb, axis=-1, keepdims=True)
+        - 2.0 * xb @ z.T
+        + jnp.sum(z * z, axis=-1)[None, :]
+    )  # (BN, C)
+    k = jnp.exp(-d2 * inv_two_sigma2)
+    out_ref[0, 0] += jnp.sum(k * mb)
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "block_n", "interpret"))
+def mmd_cross_sum(x: Array, z: Array, node_mask: Array, *, sigma: float,
+                  block_n: int = 1024, interpret: bool = True) -> Array:
+    """Σ_i mask_i Σ_c exp(−‖x_i−z_c‖²/(2σ²)) — matches ref.mmd_cross_ref."""
+    n = x.shape[0]
+    c = z.shape[0]
+    n_pad = -(-n // block_n) * block_n
+    if n_pad != n:
+        x = jnp.pad(x, ((0, n_pad - n), (0, 0)))
+        node_mask = jnp.pad(node_mask, (0, n_pad - n))
+    out = pl.pallas_call(
+        functools.partial(_kernel, inv_two_sigma2=1.0 / (2.0 * sigma * sigma)),
+        grid=(n_pad // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, 3), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+            pl.BlockSpec((c, 3), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), x.dtype),
+        interpret=interpret,
+    )(x, node_mask[:, None], z)
+    return out[0, 0]

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+Each function mirrors one kernel's contract exactly; tests sweep shapes and
+dtypes asserting kernel(interpret=True) ≍ ref.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def virtual_pathway_ref(
+    x: Array,  # (N, 3)
+    h: Array,  # (N, Dh)
+    z: Array,  # (C, 3)
+    node_mask: Array,  # (N,)
+    w1h: Array,  # (C, Dh, hid)   φ2 layer-1 weight for the h input
+    w1d: Array,  # (C, hid)       φ2 layer-1 weight column for d²
+    const1: Array,  # (C, hid)    φ2 layer-1 constant: W1_s s_c + W1_mv m^v_c + b1
+    w2: Array,  # (C, hid, hid)   φ2 layer-2
+    b2: Array,  # (C, hid)
+    wg1: Array,  # (C, hid, hid)  φ_x^v layer-1
+    bg1: Array,  # (C, hid)
+    wg2: Array,  # (C, hid, 1)    φ_x^v layer-2 (no bias)
+    wz1: Array,  # (C, hid, hid)  φ_Z layer-1
+    bz1: Array,  # (C, hid)
+    wz2: Array,  # (C, hid, 1)    φ_Z layer-2 (no bias)
+):
+    """Fused virtual pathway (Eq. 5 + virtual terms of Eqs. 6–8).
+
+    Returns dx (N,3), mh (N,hid), dz_sum (C,3), ms_sum (C,hid).
+    """
+    c = z.shape[0]
+    d2 = jnp.sum((x[:, None, :] - z[None, :, :]) ** 2, axis=-1)  # (N, C)
+    t1 = (
+        jnp.einsum("nd,cdh->nch", h, w1h)
+        + d2[:, :, None] * w1d[None, :, :]
+        + const1[None, :, :]
+    )
+    msg = jnp.einsum("nch,chk->nck", jax.nn.silu(t1), w2) + b2[None]  # (N,C,hid)
+    gate_x = jnp.einsum("nch,chk->nck", jax.nn.silu(
+        jnp.einsum("nch,chk->nck", msg, wg1) + bg1[None]), wg2)  # (N,C,1)
+    rel = x[:, None, :] - z[None, :, :]  # (N, C, 3)
+    dx = jnp.mean(rel * gate_x, axis=1)
+    mh = jnp.mean(msg, axis=1)
+    gate_z = jnp.einsum("nch,chk->nck", jax.nn.silu(
+        jnp.einsum("nch,chk->nck", msg, wz1) + bz1[None]), wz2)  # (N,C,1)
+    w = node_mask[:, None, None]
+    dz_sum = jnp.sum(-rel * gate_z * w, axis=0)  # (C,3): Σ (z_c − x_i)·φ_Z
+    ms_sum = jnp.sum(msg * w, axis=0)  # (C,hid)
+    del c
+    return dx, mh, dz_sum, ms_sum
+
+
+def mmd_cross_ref(x: Array, z: Array, node_mask: Array, sigma: float) -> Array:
+    """Σ_i mask_i Σ_c exp(−‖x_i−z_c‖²/2σ²) — the MMD cross term numerator."""
+    d2 = jnp.sum((x[:, None, :] - z[None, :, :]) ** 2, axis=-1)
+    k = jnp.exp(-d2 / (2.0 * sigma * sigma))
+    return jnp.sum(k * node_mask[:, None])
+
+
+def swa_attention_ref(q: Array, k: Array, v: Array, window: int | None,
+                      causal: bool = True) -> Array:
+    """Sliding-window (optionally causal) attention oracle.
+
+    q,k,v: (S, H, D) — single batch; window = number of past positions
+    visible (None = unlimited).  softmax over masked logits, scaled by 1/√D.
+    """
+    s, nh, d = q.shape
+    logits = jnp.einsum("qhd,khd->hqk", q, k) / jnp.sqrt(jnp.asarray(d, q.dtype))
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    logits = jnp.where(mask[None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("hqk,khd->qhd", p, v)

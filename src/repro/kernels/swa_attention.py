@@ -1,0 +1,102 @@
+"""Flash-style sliding-window attention Pallas TPU kernel.
+
+Used by the transformer pool for training/prefill at long context (the
+long_500k shapes run dense archs only through this sliding-window variant —
+DESIGN.md §5).  Classic online-softmax flash decomposition:
+
+  grid = (heads, q_blocks, k_blocks); the k axis is the innermost sequential
+  dimension, so VMEM scratch (running max / normaliser / accumulator)
+  persists across k steps.  Blocks fully outside the causal+window band are
+  skipped with ``pl.when`` (zero MXU work — the sliding window turns the
+  quadratic band into a linear one, which is the whole point).
+
+q/k/v layout: (H, S, D) with D the lane dimension (pad to 128 on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, scale, causal, window, bq, bk, nk):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = pl.program_id(1) * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    visible = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        visible &= k_pos <= q_pos
+    if window is not None:
+        visible &= k_pos > q_pos - window
+
+    # block-level skip: any(visible) is static-shape reducible
+    @pl.when(jnp.any(visible))
+    def _update():
+        q = q_ref[0].astype(jnp.float32)  # (BQ, D)
+        k = k_ref[0].astype(jnp.float32)  # (BK, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (BQ, BK)
+        s = jnp.where(visible, s, _NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(visible, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def swa_attention(
+    q: Array, k: Array, v: Array,
+    *, causal: bool = True, window: int | None = None,
+    block_q: int = 128, block_k: int = 128, interpret: bool = True,
+) -> Array:
+    """q/k/v: (H, S, D) → (H, S, D).  Matches ref.swa_attention_ref
+    (which uses (S, H, D) layout — transpose at the call site)."""
+    nh, s, d = q.shape
+    assert k.shape == v.shape == (nh, s, d)
+    bq, bk = min(block_q, s), min(block_k, s)
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    nq, nk = s // bq, s // bk
+    scale = 1.0 / (d ** 0.5)
+
+    kern = functools.partial(_kernel, scale=scale, causal=causal,
+                             window=window, bq=bq, bk=bk, nk=nk)
+    return pl.pallas_call(
+        kern,
+        grid=(nh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, iq, ik: (h, iq, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, iq, ik: (h, ik, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, iq, ik: (h, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, iq, ik: (h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((nh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,430 @@
+"""Multi-pod dry-run: lower + compile every (arch × input shape) on the
+production mesh, report memory/cost/collective analysis (no allocation).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-12b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+
+The two os.environ lines below MUST run before any jax import — jax locks the
+device count at first init (512 placeholder host devices stand in for the
+2×16×16 chip mesh).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import re
+import sys
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.archs.config import ArchConfig
+from repro.archs.model import decode_step, forward, init_arch, init_cache
+from repro.configs import INPUT_SHAPES, InputShape, get_arch
+from repro.distributed.sharding import (batch_sharding, cache_shardings,
+                                        param_shardings)
+from repro.launch.mesh import make_production_mesh
+from repro.training.lm import make_train_step
+from repro.training.optim import Adam
+
+# --------------------------------------------------------- hardware constants
+PEAK_FLOPS = 197e12  # bf16 / chip (TPU v5e-class target)
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def resolve_config(arch: str, shape: InputShape) -> ArchConfig:
+    cfg = get_arch(arch)
+    if shape.name == "long_500k" and not cfg.sub_quadratic():
+        # dense/full-attention archs run the 500k decode only through the
+        # sliding-window variant (DESIGN.md §5)
+        cfg = cfg.long_context_variant()
+    return cfg
+
+
+def depth_variants(cfg: ArchConfig):
+    """Shallow unrolled variants for cost extrapolation.
+
+    XLA's cost_analysis counts a while-loop body ONCE (not × trip count), so
+    the scanned-layer full model under-reports flops/bytes/collectives by
+    ~n_groups.  Fix: compile g∈{1,2} group depths fully unrolled (cheap) and
+    extrapolate linearly: cost(G) = cost(1) + (G−1)·(cost(2) − cost(1)).
+    Returns (cfg_g1, cfg_g2, n_groups) or None when the full config is
+    already cheap to take at face value (no layer scan).
+    """
+    import dataclasses
+
+    from repro.archs.model import _scan_plan
+
+    plan = _scan_plan(cfg)
+    if plan is None:
+        return None
+    prefix, period, groups = plan
+    if groups < 3:
+        return None
+    rem = cfg.n_layers - prefix - period * groups
+
+    def variant(g):
+        keep = prefix + period * g
+        blocks = cfg.blocks[:keep] + cfg.blocks[cfg.n_layers - rem:] if rem else cfg.blocks[:keep]
+        ffns = cfg.ffns[:keep] + cfg.ffns[cfg.n_layers - rem:] if rem else cfg.ffns[:keep]
+        return dataclasses.replace(
+            cfg, n_layers=keep + rem, blocks=blocks, ffns=ffns,
+            scan_layers=False,
+            # single-chunk attention: no seq scan → true per-layer op counts
+            q_chunk=1 << 20)
+
+    return variant(1), variant(2), groups
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    specs: dict = {}
+    if shape.kind == "train":
+        specs["tokens"] = sds((b, s), i32)
+        specs["labels"] = sds((b, s), i32)
+    elif shape.kind == "prefill":
+        specs["tokens"] = sds((b, s), i32)
+    else:  # decode: one token, cache of seq_len
+        specs["tokens"] = sds((b,), i32)
+        specs["pos"] = sds((b,), i32)
+    if cfg.has_encoder and shape.kind != "decode":
+        specs["audio"] = sds((b, cfg.n_audio_frames, cfg.d_model), jnp.bfloat16)
+    if cfg.cross_attn_every > 0 and shape.kind != "decode":
+        specs["images"] = sds((b, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def _enc_out_sds(cfg: ArchConfig, b: int):
+    if cfg.has_encoder:
+        return jax.ShapeDtypeStruct((b, cfg.n_audio_frames, cfg.d_model), jnp.bfloat16)
+    if cfg.cross_attn_every > 0:
+        return jax.ShapeDtypeStruct((b, cfg.n_image_tokens, cfg.d_model), jnp.bfloat16)
+    return None
+
+
+def lower_combo(cfg: ArchConfig, shape_name: str, mesh) -> "jax.stages.Lowered":
+    """Build the jitted step for one (cfg, shape) and lower it on ``mesh``."""
+    shape = INPUT_SHAPES[shape_name]
+    key_sds = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params_sds = jax.eval_shape(lambda k: init_arch(k, cfg), key_sds)
+    p_shard = param_shardings(params_sds, mesh,
+                              tp_min_weight=cfg.tp_min_weight,
+                              fsdp_min_weight=cfg.fsdp_min_weight)
+    specs = input_specs(cfg, shape)
+    b = shape.global_batch
+
+    if shape.kind == "train":
+        opt = Adam(lr=3e-4, grad_clip=1.0)
+        opt_sds = jax.eval_shape(opt.init, params_sds)
+        opt_shard = jax.tree.map(
+            lambda l, s=None: None, opt_sds)  # placeholder, built below
+        opt_shard = type(opt_sds)(
+            step=jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+            m=param_shardings(opt_sds.m, mesh,
+                              tp_min_weight=cfg.tp_min_weight,
+                              fsdp_min_weight=cfg.fsdp_min_weight),
+            v=param_shardings(opt_sds.v, mesh,
+                              tp_min_weight=cfg.tp_min_weight,
+                              fsdp_min_weight=cfg.fsdp_min_weight),
+        )
+        batch_shard = {k: batch_sharding(mesh, b, len(v.shape))
+                       for k, v in specs.items()}
+        step = make_train_step(cfg, opt)
+        fn = jax.jit(step, in_shardings=(p_shard, opt_shard, batch_shard))
+        return fn.lower(params_sds, opt_sds, specs)
+
+    if shape.kind == "prefill":
+        def prefill(params, batch):
+            logits, _ = forward(params, cfg, batch["tokens"],
+                                audio=batch.get("audio"),
+                                images=batch.get("images"))
+            return logits
+
+        batch_shard = {k: batch_sharding(mesh, b, len(v.shape))
+                       for k, v in specs.items()}
+        fn = jax.jit(prefill, in_shardings=(p_shard, batch_shard))
+        return fn.lower(params_sds, specs)
+
+    # decode
+    enc_sds = _enc_out_sds(cfg, b)
+    cache_sds = jax.eval_shape(
+        lambda e: init_cache(cfg, b, shape.seq_len, enc_out=e), enc_sds)
+    cache_shard = cache_shardings(cache_sds, mesh, b)
+
+    def serve_step(params, cache, tokens, pos):
+        return decode_step(params, cfg, cache, tokens, pos)
+
+    tok_shard = batch_sharding(mesh, b, 1)
+    fn = jax.jit(serve_step, in_shardings=(p_shard, cache_shard, tok_shard, tok_shard))
+    return fn.lower(params_sds, cache_sds, specs["tokens"], specs["pos"])
+
+
+# ------------------------------------------------------------- HLO analysis
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|\S+))\s+([\w\-]+)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum operand bytes of every collective op in the optimized HLO.
+
+    Optimized HLO omits operand shapes inline, so first build a map
+    instruction-name → output-shape, then resolve each collective's operand
+    list (start ops like all-gather-start are counted; their -done twins are
+    skipped to avoid double counting).
+    """
+    shapes: dict[str, str] = {}
+    coll_lines: list[tuple[str, str]] = []
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, out_shape, op = m.group(1), m.group(2), m.group(3)
+        shapes[name] = out_shape
+        base = op.replace("-start", "")
+        if base in _COLLECTIVES and not op.endswith("-done"):
+            call = line[m.end(3):]
+            args = call[: call.find(")") + 1] if ")" in call else call
+            coll_lines.append((base, args))
+    out = {c: 0 for c in _COLLECTIVES}
+    for base, args in coll_lines:
+        operand_bytes = 0
+        for opname in re.findall(r"%([\w.\-]+)", args):
+            if opname in shapes:
+                operand_bytes += _shape_bytes(shapes[opname])
+        out[base] += operand_bytes
+    return out
+
+
+def model_flops(cfg: ArchConfig, shape: InputShape) -> float:
+    """6·N_active·D (training) / 2·N_active·D (per-token inference)."""
+    n_active = active_params(cfg)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # one token per step
+
+
+def total_params(cfg: ArchConfig) -> float:
+    d, L, V = cfg.d_model, cfg.n_layers, cfg.vocab
+    n = V * d * (1 if cfg.tie_embeddings else 2)
+    for i in range(cfg.n_layers):
+        n += _layer_params(cfg, i, active_only=False)
+    if cfg.has_encoder:
+        n += cfg.encoder_layers * (4 * d * cfg.n_heads * cfg.head_dim + 3 * d * (cfg.d_ff or 4 * d))
+    return n
+
+
+def active_params(cfg: ArchConfig) -> float:
+    d, V = cfg.d_model, cfg.vocab
+    n = V * d * (1 if cfg.tie_embeddings else 2)
+    for i in range(cfg.n_layers):
+        n += _layer_params(cfg, i, active_only=True)
+    return n
+
+
+def _layer_params(cfg: ArchConfig, i: int, active_only: bool) -> float:
+    from repro.archs.config import ATTN, MAMBA2, MLA, MLSTM, SHARED_ATTN, SLSTM, SWA, FFN_MOE
+    d = cfg.d_model
+    kind = cfg.block_kind(i)
+    n = 0.0
+    if kind in (ATTN, SWA, SHARED_ATTN):
+        n += d * cfg.n_heads * cfg.head_dim * 2 + d * cfg.n_kv_heads * cfg.head_dim * 2
+        if kind == SHARED_ATTN:
+            n += 2 * d * d  # in_proj (the shared weights counted once ≈ amortised)
+    elif kind == MLA:
+        m = cfg.mla
+        n += d * cfg.n_heads * (m.d_nope + m.d_rope) + d * m.kv_lora
+        n += m.kv_lora * cfg.n_heads * (m.d_nope + m.d_v) + d * m.d_rope
+        n += cfg.n_heads * m.d_v * d
+    elif kind == MAMBA2:
+        dims_inner = cfg.ssm.expand * d
+        n += d * (2 * dims_inner + 2 * cfg.ssm.d_state + dims_inner // cfg.ssm.head_dim)
+        n += dims_inner * d
+    elif kind in (MLSTM,):
+        di = 2 * d
+        n += 2 * d * di + 3 * di * di + di * d
+    elif kind == SLSTM:
+        n += 4 * d * d + d * int(4 * d / 3) * 2
+    if cfg.ffns[i] == FFN_MOE:
+        m = cfg.moe
+        k_eff = m.top_k if active_only else m.n_experts
+        n += 3 * d * m.d_expert_ff * k_eff
+        n += 3 * d * m.d_expert_ff * m.n_shared
+        n += d * m.n_experts  # router
+    elif cfg.ffns[i] in ("swiglu", "geglu"):
+        n += 3 * d * cfg.d_ff
+    return n
+
+
+def _raw_costs(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    flops = float(cost.get("flops", 0.0)) if cost else 0.0
+    hbm = 0.0
+    if cost:
+        hbm = sum(v for k, v in cost.items() if k.startswith("bytes accessed"))
+        if not hbm:
+            hbm = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(compiled.as_text())
+    return {"flops": flops, "bytes": hbm, "coll": coll}
+
+
+def analyse(arch: str, shape_name: str, *, multi_pod: bool = False,
+            extrapolate: bool = True, verbose: bool = True,
+            cfg_transform=None, label: str = "") -> dict:
+    """``cfg_transform``: optional ArchConfig→ArchConfig hook — the perf
+    hillclimb (benchmarks/hillclimb.py) uses it to re-analyse treatment
+    variants (remat policy, chunking, precision, …) against the baseline."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    shape0 = INPUT_SHAPES[shape_name]
+    cfg = resolve_config(arch, shape0)
+    if cfg_transform is not None:
+        cfg = cfg_transform(cfg)
+
+    # production pass: the real (scanned, chunked) program — proves lowering
+    # and provides the per-device memory picture
+    t0 = time.time()
+    lowered = lower_combo(cfg, shape_name, mesh)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    direct = _raw_costs(compiled)
+
+    # analysis pass: XLA counts while-loop bodies ONCE, so scanned-layer
+    # programs under-report.  Compile 1-group and 2-group unrolled variants
+    # and extrapolate linearly to the full depth (train/prefill only — the
+    # decode path has no layer scan).
+    extrapolated = False
+    costs = direct
+    if extrapolate and shape0.kind in ("train", "prefill"):
+        dv = depth_variants(cfg)
+        if dv is not None:
+            cfg1, cfg2, groups = dv
+            c1 = _raw_costs(lower_combo(cfg1, shape_name, mesh).compile())
+            c2 = _raw_costs(lower_combo(cfg2, shape_name, mesh).compile())
+            costs = {
+                "flops": c1["flops"] + (groups - 1) * (c2["flops"] - c1["flops"]),
+                "bytes": c1["bytes"] + (groups - 1) * (c2["bytes"] - c1["bytes"]),
+                "coll": {k: c1["coll"][k] + (groups - 1) * (c2["coll"][k] - c1["coll"][k])
+                         for k in c1["coll"]},
+            }
+            extrapolated = True
+
+    flops = costs["flops"]
+    hbm_bytes = costs["bytes"]
+    coll = costs["coll"]
+    coll_total = sum(coll.values())
+
+    shape = INPUT_SHAPES[shape_name]
+    mf = model_flops(cfg, shape)
+    # cost_analysis() of an SPMD-partitioned module is PER-PARTITION
+    # (calibrated against a known sharded matmul — EXPERIMENTS.md §Dry-run),
+    # as is the collective-bytes sum from the partitioned HLO.
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm_bytes / HBM_BW
+    collective_s = coll_total / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf_per_chip = mf / n_chips
+
+    result = {
+        "label": label or "baseline",
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+        "config_name": cfg.name,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "hlo_flops": flops, "hlo_bytes": hbm_bytes,
+        "collective_bytes": coll, "collective_bytes_total": coll_total,
+        "model_flops": mf,
+        "useful_flops_ratio": mf_per_chip / flops if flops else None,
+        "extrapolated": extrapolated,
+        **{k: round(v, 6) for k, v in terms.items()},
+        "dominant": dominant,
+        "memory_analysis": {
+            k: getattr(mem, k) for k in
+            ("argument_size_in_bytes", "output_size_in_bytes",
+             "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if mem is not None and hasattr(mem, k)
+        },
+    }
+    if verbose:
+        print(json.dumps(result, indent=2, default=str))
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-extrapolate", action="store_true",
+                    help="lower+compile proof only (multi-pod pass; roofline "
+                         "numbers come from the single-pod sweep)")
+    ap.add_argument("--json", default=None, help="append results to this file")
+    args = ap.parse_args(argv)
+
+    from repro.configs import _ARCH_IDS
+
+    combos = []
+    if args.all:
+        for a in _ARCH_IDS:
+            for s in INPUT_SHAPES:
+                combos.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos = [(args.arch, args.shape)]
+
+    results = []
+    for a, s in combos:
+        print(f"=== dry-run {a} × {s} ({'2x16x16' if args.multi_pod else '16x16'}) ===",
+              flush=True)
+        try:
+            results.append(analyse(a, s, multi_pod=args.multi_pod,
+                                   extrapolate=not args.no_extrapolate))
+        except Exception as e:  # a failure here is a bug in the system
+            print(f"FAILED {a} × {s}: {type(e).__name__}: {e}", flush=True)
+            results.append({"arch": a, "shape": s, "error": str(e)})
+    if args.json:
+        with open(args.json, "a") as f:
+            for r in results:
+                f.write(json.dumps(r, default=str) + "\n")
+    n_fail = sum(1 for r in results if "error" in r)
+    print(f"\n{len(results) - n_fail}/{len(results)} combos lowered+compiled OK")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

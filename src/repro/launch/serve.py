@@ -1,0 +1,78 @@
+"""Serving launcher: batched greedy decoding with per-arch KV/state caches.
+
+  python -m repro.launch.serve --arch xlstm-125m --batch 4 --prompt-len 16 \
+      --gen 32 [--full]
+
+Runs the reduced config by default (CPU container); the full config is the
+dry-run's job.  Prints tokens/s and the per-layer cache footprint.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.archs.model import (decode_step, encode_audio, forward, init_arch,
+                               init_cache)
+from repro.configs import get_arch
+
+
+def cache_bytes(cache) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--capacity", type=int, default=None)
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    params = init_arch(jax.random.PRNGKey(args.seed), cfg)
+    b = args.batch
+    cap = args.capacity or (args.prompt_len + args.gen)
+    key = jax.random.PRNGKey(1)
+    prompt = jax.random.randint(key, (b, args.prompt_len), 0, cfg.vocab)
+
+    enc_out = None
+    if cfg.has_encoder:
+        frames = jax.random.normal(key, (b, cfg.n_audio_frames, cfg.d_model))
+        enc_out = encode_audio(params, cfg, frames)
+    elif cfg.cross_attn_every > 0:
+        enc_out = jax.random.normal(key, (b, cfg.n_image_tokens, cfg.d_model)
+                                    ).astype(jnp.bfloat16)
+
+    cache = init_cache(cfg, b, cap, enc_out=enc_out)
+    print(f"{cfg.name}: cache footprint {cache_bytes(cache)/1e6:.1f} MB "
+          f"(capacity {cap})")
+
+    step = jax.jit(lambda p, c, t, pos: decode_step(p, cfg, c, t, pos))
+    # prefill by teacher-forcing the prompt through the decode path (keeps the
+    # demo single-code-path; a production server would batch-prefill)
+    tok = prompt[:, 0]
+    t0 = time.time()
+    for t in range(args.prompt_len):
+        logits, cache = step(params, cache, prompt[:, t],
+                             jnp.full((b,), t, jnp.int32))
+    generated = []
+    for t in range(args.prompt_len, args.prompt_len + args.gen):
+        tok = jnp.argmax(logits, axis=-1)
+        generated.append(tok)
+        logits, cache = step(params, cache, tok, jnp.full((b,), t, jnp.int32))
+    dt = time.time() - t0
+    total = b * (args.prompt_len + args.gen)
+    print(f"decoded {total} tokens in {dt:.2f}s → {total/dt:.1f} tok/s")
+    print("sample:", [int(t[0]) for t in generated[:16]])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.models.egnn import EGNNConfig, init_egnn, egnn_apply
+from repro.models.fast_egnn import FastEGNNConfig, init_fast_egnn, fast_egnn_apply

@@ -1,0 +1,59 @@
+"""Non-geometric baselines from Table I: Linear dynamics and MPNN."""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import GeometricGraph
+from repro.core.mlp import init_mlp, mlp
+
+Array = jax.Array
+
+
+class LinearConfig(NamedTuple):
+    pass
+
+
+def init_linear_dyn(key, cfg: LinearConfig):
+    return {"dt": jnp.ones(())}
+
+
+def linear_dyn_apply(params, cfg: LinearConfig, g: GeometricGraph) -> Array:
+    """x' = x + θ·v — the simplest equivariant model."""
+    return g.x + params["dt"] * g.v
+
+
+class MPNNConfig(NamedTuple):
+    n_layers: int = 4
+    hidden: int = 64
+    h_in: int = 1
+
+
+def init_mpnn(key, cfg: MPNNConfig):
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    d_in = cfg.h_in + 6  # h ⊕ x ⊕ v — NOT equivariant, by design
+    return {
+        "embed": init_mlp(keys[0], [d_in, cfg.hidden]),
+        "layers": [
+            {
+                "msg": init_mlp(k, [2 * cfg.hidden, cfg.hidden, cfg.hidden]),
+                "upd": init_mlp(jax.random.fold_in(k, 1), [2 * cfg.hidden, cfg.hidden, cfg.hidden]),
+            }
+            for k in keys[1:-1]
+        ],
+        "dec": init_mlp(keys[-1], [cfg.hidden, cfg.hidden, 3]),
+    }
+
+
+def mpnn_apply(params, cfg: MPNNConfig, g: GeometricGraph) -> Array:
+    n = g.x.shape[0]
+    z = mlp(params["embed"], jnp.concatenate([g.h, g.x, g.v], axis=-1))
+    for lp in params["layers"]:
+        m = mlp(lp["msg"], jnp.concatenate([z[g.receivers], z[g.senders]], axis=-1))
+        m = m * g.edge_mask[:, None]
+        deg = jnp.maximum(jax.ops.segment_sum(g.edge_mask, g.receivers, num_segments=n), 1.0)
+        agg = jax.ops.segment_sum(m, g.receivers, num_segments=n) / deg[:, None]
+        z = z + mlp(lp["upd"], jnp.concatenate([z, agg], axis=-1))
+    return g.x + mlp(params["dec"], z)

@@ -1,0 +1,54 @@
+"""The virtual-node mechanism as a generic plug-in (Sec. V).
+
+``virtual_plugin_step`` bundles the auxiliary pathway that Sec. V bolts onto
+RF / SchNet / TFN: per-channel real↔virtual messages, the real-coordinate
+correction term ``(1/C)Σ_c (x_i−z_c)φ_x^v(m_ic)``, and the virtual-node
+aggregation — all without touching the host model's native update rule.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.virtual_nodes import (
+    VirtualState,
+    init_virtual_block,
+    masked_com,
+    real_from_virtual,
+    virtual_aggregate,
+    virtual_global_message,
+    virtual_messages,
+)
+
+Array = jax.Array
+
+
+def init_plugin(key, n_virtual: int, h_dim: int, s_dim: int, hidden: int):
+    return init_virtual_block(key, n_virtual, h_dim, s_dim, hidden)
+
+
+def virtual_plugin_step(
+    vb,
+    h: Array,  # (N, h_dim) — may be zero-width (FastRF drops features)
+    x: Array,
+    vs: VirtualState,
+    node_mask: Array,
+    axis_name: Optional[str] = None,
+    coord_clamp: float = 10.0,
+) -> tuple[Array, Array, VirtualState]:
+    """One layer of the auxiliary virtual pathway.
+
+    Returns (dx_virtual (N,3), mh_virtual (N,hidden), updated virtual state).
+    ``coord_clamp`` bounds the coordinate correction per layer — host models
+    without their own update normalisation (SchNet's Eq. 13 bolt-on) are
+    otherwise one bad gate away from a runaway |x| → |d²| feedback loop.
+    """
+    com = masked_com(x, node_mask, axis_name)
+    mv = virtual_global_message(vs.z, com)
+    msgs = virtual_messages(vb, h, x, vs, mv)
+    dx_v, mh_v = real_from_virtual(vb, x, vs, msgs)
+    dx_v = jnp.clip(dx_v, -coord_clamp, coord_clamp)
+    vs_new = virtual_aggregate(vb, x, vs, msgs, node_mask, axis_name)
+    return dx_v, mh_v, vs_new

@@ -1,0 +1,86 @@
+"""Uniform model registry: name → (make_config, init, apply→predicted coords).
+
+Every apply returns the predicted coordinates (N,3); feature outputs and
+virtual states are exposed through ``apply_full`` where the model has them
+(needed for the MMD term of the training objective).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+
+from repro.core.graph import GeometricGraph
+from repro.models import baselines, egnn, fast_egnn, rf, schnet, tfn
+
+Array = jax.Array
+
+
+class ModelSpec(NamedTuple):
+    make_config: Callable[..., Any]
+    init: Callable[..., Any]
+    # apply_full(params, cfg, graph, axis_name) -> (x_pred, aux dict)
+    apply_full: Callable[..., tuple]
+    has_virtual: bool
+
+
+def _egnn_full(p, cfg, g, axis_name=None):
+    x, h = egnn.egnn_apply(p, cfg, g)
+    return x, {"h": h}
+
+
+def _fast_egnn_full(p, cfg, g, axis_name=None):
+    x, h, vs = fast_egnn.fast_egnn_apply(p, cfg, g, axis_name=axis_name)
+    return x, {"h": h, "virtual": vs}
+
+
+def _rf_full(p, cfg, g, axis_name=None):
+    return rf.rf_apply(p, cfg, g, axis_name), {}
+
+
+def _schnet_full(p, cfg, g, axis_name=None):
+    x, h = schnet.schnet_apply(p, cfg, g, axis_name)
+    return x, {"h": h}
+
+
+def _tfn_full(p, cfg, g, axis_name=None):
+    x, h = tfn.tfn_apply(p, cfg, g, axis_name)
+    return x, {"h": h}
+
+
+def _linear_full(p, cfg, g, axis_name=None):
+    return baselines.linear_dyn_apply(p, cfg, g), {}
+
+
+def _mpnn_full(p, cfg, g, axis_name=None):
+    return baselines.mpnn_apply(p, cfg, g), {}
+
+
+REGISTRY: dict[str, ModelSpec] = {
+    "linear": ModelSpec(baselines.LinearConfig, baselines.init_linear_dyn, _linear_full, False),
+    "mpnn": ModelSpec(baselines.MPNNConfig, baselines.init_mpnn, _mpnn_full, False),
+    "egnn": ModelSpec(egnn.EGNNConfig, egnn.init_egnn, _egnn_full, False),
+    "fast_egnn": ModelSpec(fast_egnn.FastEGNNConfig, fast_egnn.init_fast_egnn, _fast_egnn_full, True),
+    "rf": ModelSpec(rf.RFConfig, rf.init_rf, _rf_full, False),
+    "fast_rf": ModelSpec(rf.RFConfig, rf.init_rf, _rf_full, True),
+    "schnet": ModelSpec(schnet.SchNetConfig, schnet.init_schnet, _schnet_full, False),
+    "fast_schnet": ModelSpec(schnet.SchNetConfig, schnet.init_schnet, _schnet_full, True),
+    "tfn": ModelSpec(tfn.TFNConfig, tfn.init_tfn, _tfn_full, False),
+    "fast_tfn": ModelSpec(tfn.TFNConfig, tfn.init_tfn, _tfn_full, True),
+}
+
+# "fast_*" plug-in variants need n_virtual > 0 in their config; plain variants
+# force it to 0 so the registry name fully determines the model family.
+_FORCE_VIRTUAL0 = {"rf", "schnet", "tfn"}
+
+
+def make_model(name: str, key, **cfg_overrides):
+    """Returns (cfg, params, apply_full)."""
+    spec = REGISTRY[name]
+    if name in _FORCE_VIRTUAL0:
+        cfg_overrides["n_virtual"] = 0
+    elif name.startswith("fast_") and name != "fast_egnn":
+        cfg_overrides.setdefault("n_virtual", 3)
+    cfg = spec.make_config(**cfg_overrides)
+    params = spec.init(key, cfg)
+    return cfg, params, spec.apply_full

@@ -1,0 +1,72 @@
+"""Radial Field (Köhler et al., 2019) + FastRF (Sec. V).
+
+RF computes messages purely from inter-node distances — no node features.
+FastRF therefore also drops ``h`` and the virtual features ``S`` from the
+virtual pathway (zero-width arrays), keeping only geometry.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import GeometricGraph
+from repro.core.mlp import init_mlp, mlp
+from repro.core.virtual_nodes import VirtualState, init_virtual_coords
+from repro.models.plugin import init_plugin, virtual_plugin_step
+
+Array = jax.Array
+
+
+class RFConfig(NamedTuple):
+    n_layers: int = 4
+    hidden: int = 64
+    n_virtual: int = 0  # 0 → plain RF
+    velocity: bool = True
+    coord_clamp: float = 100.0
+
+
+def init_rf(key, cfg: RFConfig):
+    keys = jax.random.split(key, 2 * cfg.n_layers)
+    layers = []
+    for i in range(cfg.n_layers):
+        p = {"phi": init_mlp(keys[2 * i], [1, cfg.hidden, 1], final_bias=False)}
+        if cfg.n_virtual > 0:
+            # h_dim = 0, s_dim = 0: geometry-only virtual pathway
+            p["virtual"] = init_plugin(keys[2 * i + 1], cfg.n_virtual, 0, 0, cfg.hidden)
+        layers.append(p)
+    return {"layers": layers}
+
+
+def rf_apply(params, cfg: RFConfig, g: GeometricGraph,
+             axis_name: Optional[str] = None) -> Array:
+    x = g.x
+    n = x.shape[0]
+    vs = None
+    if cfg.n_virtual > 0:
+        z0 = init_virtual_coords(x, g.node_mask, cfg.n_virtual, axis_name)
+        vs = VirtualState(z=z0, s=jnp.zeros((cfg.n_virtual, 0), x.dtype))
+    h_empty = jnp.zeros((n, 0), x.dtype)
+
+    for lp in params["layers"]:
+        rel = x[g.receivers] - x[g.senders]
+        d2 = jnp.sum(rel**2, axis=-1, keepdims=True)
+        gate = jnp.clip(mlp(lp["phi"], d2), -cfg.coord_clamp, cfg.coord_clamp)
+        # Köhler-style normalised radial field: scale the pair direction by
+        # 1/(‖r‖+1) so far-apart pairs can't produce distance-proportional
+        # updates (raw rel·gate diverges on dense far-field graphs).
+        # eps inside the sqrt: padded zero-edges otherwise give d(sqrt)/d(d²)
+        # = ∞ and the masked-out gradient becomes 0·∞ = NaN.
+        dx_e = rel / (jnp.sqrt(d2 + 1e-12) + 1.0) * gate * g.edge_mask[:, None]
+        deg = jax.ops.segment_sum(g.edge_mask, g.receivers, num_segments=n)
+        dx = jax.ops.segment_sum(dx_e, g.receivers, num_segments=n)
+        dx = dx / jnp.maximum(deg, 1.0)[:, None]
+        if cfg.n_virtual > 0:
+            dx_v, _, vs = virtual_plugin_step(lp["virtual"], h_empty, x, vs,
+                                              g.node_mask, axis_name)
+            dx = dx + dx_v
+        if cfg.velocity:
+            dx = dx + g.v  # RF integrates the initial velocity directly
+        x = x + dx * g.node_mask[:, None]
+    return x

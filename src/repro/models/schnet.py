@@ -1,0 +1,103 @@
+"""SchNet (Schütt et al., 2018) + FastSchNet (Sec. V, Eq. 13).
+
+SchNet is invariant: continuous-filter convolutions update features from
+RBF-expanded distances.  For position prediction we attach the equivariant
+coordinate head of Eq. 13; FastSchNet additionally receives the virtual
+pathway correction.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import GeometricGraph
+from repro.core.mlp import init_linear, init_mlp, linear, mlp
+from repro.core.virtual_nodes import VirtualState, init_virtual_coords
+from repro.models.plugin import init_plugin, virtual_plugin_step
+
+Array = jax.Array
+
+
+class SchNetConfig(NamedTuple):
+    n_layers: int = 4
+    hidden: int = 64
+    h_in: int = 1
+    n_rbf: int = 32
+    rbf_cutoff: float = 10.0
+    n_virtual: int = 0
+    s_dim: int = 64
+    velocity: bool = True
+    coord_clamp: float = 100.0
+
+
+def ssp(x):
+    """Shifted softplus, SchNet's activation."""
+    return jax.nn.softplus(x) - jnp.log(2.0)
+
+
+def rbf_expand(d: Array, n_rbf: int, cutoff: float) -> Array:
+    """Gaussian RBF expansion of distances, (E,) → (E, n_rbf)."""
+    centers = jnp.linspace(0.0, cutoff, n_rbf)
+    gamma = n_rbf / cutoff
+    return jnp.exp(-gamma * (d[:, None] - centers[None, :]) ** 2)
+
+
+def init_schnet(key, cfg: SchNetConfig):
+    keys = jax.random.split(key, 3 * cfg.n_layers + 1)
+    layers = []
+    for i in range(cfg.n_layers):
+        k_f, k_c, k_v = keys[3 * i], keys[3 * i + 1], keys[3 * i + 2]
+        p = {
+            # filter generator W(d): rbf → hidden
+            "filter": init_mlp(k_f, [cfg.n_rbf, cfg.hidden, cfg.hidden]),
+            "in_proj": init_linear(jax.random.fold_in(k_f, 1), cfg.hidden, cfg.hidden),
+            "out": init_mlp(jax.random.fold_in(k_f, 2), [cfg.hidden, cfg.hidden, cfg.hidden]),
+            # Eq. 13 coordinate head: φ(h_i, h_j) scalar gate
+            "coord": init_mlp(k_c, [2 * cfg.hidden + 1, cfg.hidden, 1], final_bias=False),
+            "phi_v": init_mlp(jax.random.fold_in(k_c, 1), [cfg.hidden, cfg.hidden, 1]),
+        }
+        if cfg.n_virtual > 0:
+            p["virtual"] = init_plugin(k_v, cfg.n_virtual, cfg.hidden, cfg.s_dim, cfg.hidden)
+        layers.append(p)
+    out = {"embed": init_mlp(keys[-1], [cfg.h_in, cfg.hidden]), "layers": layers}
+    if cfg.n_virtual > 0:
+        out["s_init"] = 0.1 * jax.random.normal(jax.random.fold_in(keys[-1], 7),
+                                                (cfg.n_virtual, cfg.s_dim))
+    return out
+
+
+def schnet_apply(params, cfg: SchNetConfig, g: GeometricGraph,
+                 axis_name: Optional[str] = None) -> tuple[Array, Array]:
+    h = mlp(params["embed"], g.h)
+    x = g.x
+    n = x.shape[0]
+    vs = None
+    if cfg.n_virtual > 0:
+        z0 = init_virtual_coords(x, g.node_mask, cfg.n_virtual, axis_name)
+        vs = VirtualState(z=z0, s=params["s_init"])
+
+    for lp in params["layers"]:
+        rel = x[g.receivers] - x[g.senders]
+        d2 = jnp.sum(rel**2, axis=-1)
+        d = jnp.sqrt(d2 + 1e-12)
+        w = mlp(lp["filter"], rbf_expand(d, cfg.n_rbf, cfg.rbf_cutoff), act=ssp)
+        # continuous-filter convolution (cfconv)
+        hj = linear(lp["in_proj"], h)[g.senders]
+        msg = hj * w * g.edge_mask[:, None]
+        agg = jax.ops.segment_sum(msg, g.receivers, num_segments=n)
+        h = h + mlp(lp["out"], agg, act=ssp)
+        # Eq. 13: equivariant coordinate head + virtual pathway
+        gate_in = jnp.concatenate([h[g.receivers], h[g.senders], d2[:, None]], axis=-1)
+        gate = jnp.clip(mlp(lp["coord"], gate_in), -cfg.coord_clamp, cfg.coord_clamp)
+        dx_e = rel * gate * g.edge_mask[:, None]
+        deg = jnp.maximum(jax.ops.segment_sum(g.edge_mask, g.receivers, num_segments=n), 1.0)
+        dx = jax.ops.segment_sum(dx_e, g.receivers, num_segments=n) / deg[:, None]
+        if cfg.n_virtual > 0:
+            dx_v, _, vs = virtual_plugin_step(lp["virtual"], h, x, vs, g.node_mask, axis_name)
+            dx = dx + dx_v
+        if cfg.velocity:
+            dx = dx + mlp(lp["phi_v"], h) * g.v
+        x = x + dx * g.node_mask[:, None]
+    return x, h

@@ -1,0 +1,258 @@
+"""Attention layers: GQA/MQA (full, sliding-window, cross) and MLA.
+
+Memory-aware by construction: training/prefill attention is *chunked* over
+query blocks (``lax.scan``) so the (S, T) score matrix never materialises for
+more than one block — the XLA analogue of the flash decomposition (the Pallas
+kernel in ``kernels/swa_attention.py`` is the TPU-native version; selection
+via ``impl='pallas'`` — interpret-validated off-TPU).
+
+Decode paths operate on a KV cache: full-attention layers keep (B, T, KV, D);
+sliding-window layers keep a ring buffer of size ``window`` with per-slot
+position metadata (so long_500k decode stores only the window).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.basic import apply_rope, dense_init
+
+Array = jax.Array
+_NEG = -1e30
+
+
+# ----------------------------------------------------------------- GQA init
+def init_gqa(key, d_model: int, n_heads: int, n_kv: int, d_head: int):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, d_model, n_heads * d_head),
+        "wk": dense_init(kk, d_model, n_kv * d_head),
+        "wv": dense_init(kv, d_model, n_kv * d_head),
+        "wo": dense_init(ko, n_heads * d_head, d_model),
+    }
+
+
+def _chunked_attention(
+    q: Array,  # (B, S, H, D)
+    k: Array,  # (B, T, KV, D)
+    v: Array,  # (B, T, KV, D)
+    q_positions: Array,  # (S,)
+    kv_positions: Array,  # (T,)
+    *,
+    causal: bool,
+    window: Optional[int],
+    q_chunk: int = 512,
+) -> Array:
+    b, s, h, d = q.shape
+    t, kv_heads = k.shape[1], k.shape[2]
+    g = h // kv_heads
+    scale = 1.0 / (d ** 0.5)
+    qc = min(q_chunk, s)
+    if s % qc != 0:  # fall back to one chunk for ragged sizes
+        qc = s
+    n_chunks = s // qc
+    qr = q.reshape(b, n_chunks, qc, kv_heads, g, d).transpose(1, 0, 3, 4, 2, 5)
+    qpos = q_positions.reshape(n_chunks, qc)
+
+    def one_chunk(carry, inp):
+        qi, qp = inp  # (B, KV, G, qc, D), (qc,)
+        logits = jnp.einsum("bkgqd,btkd->bkgqt", qi.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        mask = jnp.ones((qc, t), bool)
+        if causal:
+            mask &= kv_positions[None, :] <= qp[:, None]
+        if window is not None:
+            mask &= kv_positions[None, :] > qp[:, None] - window
+        logits = jnp.where(mask[None, None, None], logits, _NEG)
+        p = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bkgqt,btkd->bkgqd", p, v.astype(jnp.float32))
+        return carry, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(one_chunk, None, (qr, qpos))
+    # (n_chunks, B, KV, G, qc, Dv) → (B, S, H, Dv); Dv may differ from D (MLA)
+    dv = v.shape[-1]
+    return outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, s, h, dv)
+
+
+def gqa_forward(
+    p,
+    x: Array,  # (B, S, d_model)
+    positions: Array,  # (S,)
+    *,
+    n_heads: int,
+    n_kv: int,
+    d_head: int,
+    causal: bool = True,
+    window: Optional[int] = None,
+    rope_theta: float = 10000.0,
+    cross_kv: Optional[Array] = None,  # (B, T, d_model) encoder states
+    q_chunk: int = 512,
+) -> Array:
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, n_heads, d_head)
+    if cross_kv is None:
+        src, t = x, s
+        kv_positions = positions
+    else:
+        src, t = cross_kv, cross_kv.shape[1]
+        kv_positions = jnp.arange(t)
+    k = (src @ p["wk"]).reshape(b, t, n_kv, d_head)
+    v = (src @ p["wv"]).reshape(b, t, n_kv, d_head)
+    if cross_kv is None:  # RoPE only for self-attention
+        q = apply_rope(q, positions[None], rope_theta)
+        k = apply_rope(k, kv_positions[None], rope_theta)
+    out = _chunked_attention(q, k, v, positions, kv_positions,
+                             causal=causal and cross_kv is None,
+                             window=window, q_chunk=q_chunk)
+    return out.reshape(b, s, n_heads * d_head) @ p["wo"]
+
+
+# ------------------------------------------------------------------ decode
+class KVCache(NamedTuple):
+    """Either a full cache (capacity = max seq) or a ring buffer (= window)."""
+
+    k: Array  # (B, cap, KV, D)
+    v: Array  # (B, cap, KV, D)
+    pos: Array  # (B, cap) int32 — absolute position stored in each slot (-1 empty)
+
+
+def init_kv_cache(batch: int, capacity: int, n_kv: int, d_head: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, capacity, n_kv, d_head), dtype),
+        v=jnp.zeros((batch, capacity, n_kv, d_head), dtype),
+        pos=jnp.full((batch, capacity), -1, jnp.int32),
+    )
+
+
+def prefill_kv_cache(cache: KVCache, k: Array, v: Array, positions: Array) -> KVCache:
+    """Write a prefix (used by the prefill path; capacity ≥ S)."""
+    s = k.shape[1]
+    return KVCache(
+        k=jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), 0, 1),
+        v=jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), 0, 1),
+        pos=jax.lax.dynamic_update_slice_in_dim(
+            cache.pos, jnp.broadcast_to(positions[None, :s], (cache.pos.shape[0], s)).astype(jnp.int32), 0, 1),
+    )
+
+
+def gqa_decode(
+    p,
+    x: Array,  # (B, 1, d_model)
+    cache: KVCache,
+    t_pos: Array,  # (B,) int32 — absolute position of the new token
+    *,
+    n_heads: int,
+    n_kv: int,
+    d_head: int,
+    window: Optional[int] = None,
+    rope_theta: float = 10000.0,
+) -> tuple[Array, KVCache]:
+    b = x.shape[0]
+    cap = cache.k.shape[1]
+    q = (x @ p["wq"]).reshape(b, 1, n_heads, d_head)
+    k_new = (x @ p["wk"]).reshape(b, 1, n_kv, d_head)
+    v_new = (x @ p["wv"]).reshape(b, 1, n_kv, d_head)
+    q = apply_rope(q, t_pos[:, None], rope_theta)
+    k_new = apply_rope(k_new, t_pos[:, None], rope_theta)
+    slot = t_pos % cap  # ring buffer when cap == window; plain slot otherwise
+    bidx = jnp.arange(b)
+    k = cache.k.at[bidx, slot].set(k_new[:, 0].astype(cache.k.dtype))
+    v = cache.v.at[bidx, slot].set(v_new[:, 0].astype(cache.v.dtype))
+    pos = cache.pos.at[bidx, slot].set(t_pos)
+    g = n_heads // n_kv
+    qr = q.reshape(b, n_kv, g, d_head)
+    logits = jnp.einsum("bkgd,btkd->bkgt", qr.astype(jnp.float32),
+                        k.astype(jnp.float32)) / (d_head ** 0.5)
+    valid = (pos >= 0) & (pos <= t_pos[:, None])
+    if window is not None:
+        valid &= pos > (t_pos[:, None] - window)
+    logits = jnp.where(valid[:, None, None, :], logits, _NEG)
+    pattn = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", pattn, v.astype(jnp.float32))
+    out = out.reshape(b, 1, n_heads * d_head).astype(x.dtype) @ p["wo"]
+    return out, KVCache(k=k, v=v, pos=pos)
+
+
+# -------------------------------------------------------------------- MLA
+def init_mla(key, d_model: int, n_heads: int, *, kv_lora: int, d_nope: int,
+             d_rope: int, d_v: int):
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], d_model, n_heads * (d_nope + d_rope)),
+        "w_dkv": dense_init(ks[1], d_model, kv_lora),
+        "w_uk": dense_init(ks[2], kv_lora, n_heads * d_nope),
+        "w_uv": dense_init(ks[3], kv_lora, n_heads * d_v),
+        "w_kr": dense_init(ks[4], d_model, d_rope),  # shared rope key
+        "wo": dense_init(ks[5], n_heads * d_v, d_model),
+    }
+
+
+def mla_forward(p, x: Array, positions: Array, *, n_heads: int, kv_lora: int,
+                d_nope: int, d_rope: int, d_v: int, causal: bool = True,
+                rope_theta: float = 10000.0, q_chunk: int = 512) -> Array:
+    """DeepSeek-V2 Multi-head Latent Attention (expanded form).
+
+    KV is compressed to a per-token latent c_kv (kv_lora) + a shared rope key
+    (d_rope); decode caches only those (kv_lora + d_rope floats per token).
+    """
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, n_heads, d_nope + d_rope)
+    q_nope, q_rope = q[..., :d_nope], q[..., d_nope:]
+    q_rope = apply_rope(q_rope, positions[None], rope_theta)
+    c_kv = x @ p["w_dkv"]  # (B, S, kv_lora)
+    k_rope = apply_rope((x @ p["w_kr"])[:, :, None, :], positions[None], rope_theta)
+    k_nope = (c_kv @ p["w_uk"]).reshape(b, s, n_heads, d_nope)
+    value = (c_kv @ p["w_uv"]).reshape(b, s, n_heads, d_v)
+    k_full = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, n_heads, d_rope))], -1)
+    q_full = jnp.concatenate([q_nope, q_rope], -1)
+    out = _chunked_attention(q_full, k_full, value, positions, positions,
+                             causal=causal, window=None, q_chunk=q_chunk)
+    return out.reshape(b, s, n_heads * d_v) @ p["wo"]
+
+
+class MLACache(NamedTuple):
+    c_kv: Array  # (B, cap, kv_lora)
+    k_rope: Array  # (B, cap, d_rope)
+    pos: Array  # (B, cap)
+
+
+def init_mla_cache(batch: int, capacity: int, kv_lora: int, d_rope: int,
+                   dtype=jnp.bfloat16) -> MLACache:
+    return MLACache(
+        c_kv=jnp.zeros((batch, capacity, kv_lora), dtype),
+        k_rope=jnp.zeros((batch, capacity, d_rope), dtype),
+        pos=jnp.full((batch, capacity), -1, jnp.int32),
+    )
+
+
+def mla_decode(p, x: Array, cache: MLACache, t_pos: Array, *, n_heads: int,
+               kv_lora: int, d_nope: int, d_rope: int, d_v: int,
+               rope_theta: float = 10000.0) -> tuple[Array, MLACache]:
+    b = x.shape[0]
+    cap = cache.c_kv.shape[1]
+    q = (x @ p["wq"]).reshape(b, 1, n_heads, d_nope + d_rope)
+    q_nope, q_rope = q[..., :d_nope], q[..., d_nope:]
+    q_rope = apply_rope(q_rope, t_pos[:, None], rope_theta)
+    c_new = (x @ p["w_dkv"]).reshape(b, 1, kv_lora)
+    kr_new = apply_rope((x @ p["w_kr"]).reshape(b, 1, 1, d_rope), t_pos[:, None], rope_theta)
+    slot = t_pos % cap
+    bidx = jnp.arange(b)
+    c_kv = cache.c_kv.at[bidx, slot].set(c_new[:, 0].astype(cache.c_kv.dtype))
+    k_rope = cache.k_rope.at[bidx, slot].set(kr_new[:, 0, 0, :].astype(cache.k_rope.dtype))
+    pos = cache.pos.at[bidx, slot].set(t_pos)
+    # expand latents → keys/values (absorbed-form left as a perf iteration)
+    k_nope = (c_kv @ p["w_uk"]).reshape(b, cap, n_heads, d_nope)
+    value = (c_kv @ p["w_uv"]).reshape(b, cap, n_heads, d_v)
+    logits = (
+        jnp.einsum("bhd,bthd->bht", q_nope[:, 0].astype(jnp.float32), k_nope.astype(jnp.float32))
+        + jnp.einsum("bhd,btd->bht", q_rope[:, 0].astype(jnp.float32), k_rope.astype(jnp.float32))
+    ) / ((d_nope + d_rope) ** 0.5)
+    valid = (pos >= 0) & (pos <= t_pos[:, None])
+    logits = jnp.where(valid[:, None, :], logits, _NEG)
+    pattn = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bht,bthd->bhd", pattn, value.astype(jnp.float32))
+    out = out.reshape(b, 1, n_heads * d_v).astype(x.dtype) @ p["wo"]
+    return out, MLACache(c_kv=c_kv, k_rope=k_rope, pos=pos)

@@ -1,0 +1,86 @@
+"""Transformer primitives: norms, RoPE, dense layers, FFNs (pure pytree)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ------------------------------------------------------------------- init
+def dense_init(key, d_in: int, d_out: int, scale: float | None = None):
+    scale = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+
+
+# ------------------------------------------------------------------- norms
+def init_rmsnorm(d: int):
+    return {"scale": jnp.zeros((d,), jnp.float32)}  # gemma-style (1 + scale)
+
+
+def rmsnorm(p, x: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + p["scale"])).astype(dt)
+
+
+def init_layernorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p, x: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]).astype(dt)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_freqs(d_head: int, theta: float = 10000.0) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # (D/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..., S, 1, D/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -------------------------------------------------------------------- FFNs
+def init_swiglu(key, d: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": dense_init(k1, d, d_ff), "w_up": dense_init(k2, d, d_ff),
+            "w_down": dense_init(k3, d_ff, d)}
+
+
+def swiglu(p, x: Array) -> Array:
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def init_geglu(key, d: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"w_gate": dense_init(k1, d, d_ff), "w_up": dense_init(k2, d, d_ff),
+            "w_down": dense_init(k3, d_ff, d)}
+
+
+def geglu(p, x: Array) -> Array:
+    return (jax.nn.gelu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def init_mlp_ffn(key, d: int, d_ff: int):
+    k1, k2 = jax.random.split(key)
+    return {"w_in": dense_init(k1, d, d_ff), "w_out": dense_init(k2, d_ff, d)}
+
+
+def mlp_ffn(p, x: Array) -> Array:
+    return jax.nn.gelu(x @ p["w_in"]) @ p["w_out"]

@@ -1,0 +1,177 @@
+"""Mamba2 (SSD) layer — chunked state-space dual form + O(1) decode.
+
+Train/prefill uses the SSD block decomposition (Dao & Gu, 2024): intra-chunk
+quadratic (attention-like) term + inter-chunk recurrence carried by a
+``lax.scan`` over chunks, so the materialised state is (B, H, P, N) per chunk
+boundary instead of per step — this is what makes long_500k tractable.
+Decode keeps the recurrent state and the causal-conv tail in a cache.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.basic import dense_init, init_rmsnorm, rmsnorm
+
+Array = jax.Array
+
+
+class Mamba2Dims(NamedTuple):
+    d_model: int
+    d_inner: int  # = expand * d_model
+    n_heads: int  # d_inner // head_dim
+    head_dim: int
+    d_state: int
+    d_conv: int = 4
+
+
+def mamba2_dims(d_model: int, d_state: int = 64, head_dim: int = 64,
+                expand: int = 2) -> Mamba2Dims:
+    d_inner = expand * d_model
+    return Mamba2Dims(d_model=d_model, d_inner=d_inner,
+                      n_heads=d_inner // head_dim, head_dim=head_dim,
+                      d_state=d_state)
+
+
+def init_mamba2(key, dims: Mamba2Dims):
+    ks = jax.random.split(key, 5)
+    d_in_proj = 2 * dims.d_inner + 2 * dims.d_state + dims.n_heads  # z, x, B, C, dt
+    conv_ch = dims.d_inner + 2 * dims.d_state  # conv over x, B, C
+    return {
+        "in_proj": dense_init(ks[0], dims.d_model, d_in_proj),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (dims.d_conv, conv_ch)),
+        "conv_b": jnp.zeros((conv_ch,)),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, dims.n_heads)),  # A = -exp(a_log)
+        "dt_bias": jnp.zeros((dims.n_heads,)),
+        "d_skip": jnp.ones((dims.n_heads,)),
+        "norm": init_rmsnorm(dims.d_inner),
+        "out_proj": dense_init(ks[4], dims.d_inner, dims.d_model),
+    }
+
+
+def _split_proj(proj: Array, dims: Mamba2Dims):
+    di, ds, nh = dims.d_inner, dims.d_state, dims.n_heads
+    z = proj[..., :di]
+    xbc = proj[..., di : di + di + 2 * ds]
+    dt = proj[..., di + di + 2 * ds :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: Array, w: Array, b: Array) -> Array:
+    """xbc: (B, S, C); depthwise causal conv, kernel (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _ssd_chunked(xh: Array, bmat: Array, cmat: Array, dt: Array, a: Array,
+                 h0: Array, chunk: int = 128):
+    """SSD scan.  xh: (B,S,H,P), b/c: (B,S,N), dt: (B,S,H), a: (H,) (negative).
+
+    Returns y: (B,S,H,P), h_final: (B,H,P,N).
+    State update: h ← exp(a·dt)h + dt·x⊗B;  y = h·C.
+    """
+    bsz, s, nh, p = xh.shape
+    n = bmat.shape[-1]
+    if s % chunk != 0:
+        chunk = s  # degenerate single chunk for ragged smoke shapes
+    nc = s // chunk
+    xc = xh.reshape(bsz, nc, chunk, nh, p)
+    bc = bmat.reshape(bsz, nc, chunk, n)
+    cc = cmat.reshape(bsz, nc, chunk, n)
+    dtc = dt.reshape(bsz, nc, chunk, nh)
+
+    loga = a[None, None, None, :] * dtc  # (B,nc,L,H), ≤ 0
+    seg = jnp.cumsum(loga, axis=2)  # within-chunk cumulative log decay
+
+    # intra-chunk (attention-like) term
+    rel = seg[:, :, :, None, :] - seg[:, :, None, :, :]  # (B,nc,L,L,H) log decay t←s
+    li = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    causal = (lj <= li)[None, None, :, :, None]
+    # mask inside the exponent: exp(+large) on the non-causal side would give
+    # inf·0 = NaN in the backward pass of a post-hoc where().
+    gamma = jnp.exp(jnp.where(causal, rel, -1e9))  # (B,nc,L,L,H)
+    cb = jnp.einsum("bctn,bcsn->bcts", cc, bc)  # (B,nc,L,L)
+    m = cb[..., None] * gamma * dtc[:, :, None, :, :]  # (B,nc,L,L,H)
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", m, xc)
+
+    # chunk-boundary states
+    decay_to_end = jnp.exp(seg[:, :, -1:, :] - seg)  # (B,nc,L,H)
+    db = jnp.einsum("bclh,bcln,bclhp->bchpn", dtc * decay_to_end, bc, xc)
+    chunk_decay = jnp.exp(seg[:, :, -1, :])  # (B,nc,H)
+
+    def step(h, inp):
+        dbi, cdi = inp  # (B,H,P,N), (B,H)
+        h_new = h * cdi[:, :, None, None] + dbi
+        return h_new, h  # emit state *entering* the chunk
+
+    (h_final, h_starts) = jax.lax.scan(
+        step, h0, (db.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_starts = h_starts.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    # inter-chunk term: y += C_t · (decay_from_start · h_start)
+    decay_from_start = jnp.exp(seg)  # (B,nc,L,H)
+    y_inter = jnp.einsum("bcln,bchpn,bclh->bclhp", cc, h_starts, decay_from_start)
+    y = (y_intra + y_inter).reshape(bsz, s, nh, p)
+    return y, h_final
+
+
+def mamba2_forward(p, x: Array, dims: Mamba2Dims, chunk: int = 128) -> Array:
+    """x: (B, S, d_model) → (B, S, d_model)."""
+    bsz, s, _ = x.shape
+    proj = x @ p["in_proj"]
+    z, xbc, dt = _split_proj(proj, dims)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    f32 = lambda t: t.astype(jnp.float32)
+    xh = f32(xbc[..., : dims.d_inner]).reshape(bsz, s, dims.n_heads, dims.head_dim)
+    bmat = f32(xbc[..., dims.d_inner : dims.d_inner + dims.d_state])
+    cmat = f32(xbc[..., dims.d_inner + dims.d_state :])
+    dt = jax.nn.softplus(f32(dt) + f32(p["dt_bias"]))  # (B,S,H)
+    a = -jnp.exp(f32(p["a_log"]))
+    h0 = jnp.zeros((bsz, dims.n_heads, dims.head_dim, dims.d_state), jnp.float32)
+    y, _ = _ssd_chunked(xh, bmat, cmat, dt, a, h0, chunk)
+    y = y + f32(p["d_skip"])[None, None, :, None] * xh
+    y = y.astype(x.dtype).reshape(bsz, s, dims.d_inner) * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y)
+    return y @ p["out_proj"]
+
+
+class Mamba2Cache(NamedTuple):
+    h: Array  # (B, H, P, N) recurrent state
+    conv: Array  # (B, K-1, conv_ch) causal-conv tail
+
+
+def init_mamba2_cache(batch: int, dims: Mamba2Dims, dtype=jnp.float32) -> Mamba2Cache:
+    conv_ch = dims.d_inner + 2 * dims.d_state
+    return Mamba2Cache(
+        h=jnp.zeros((batch, dims.n_heads, dims.head_dim, dims.d_state), dtype),
+        conv=jnp.zeros((batch, dims.d_conv - 1, conv_ch), dtype),
+    )
+
+
+def mamba2_decode(p, x: Array, cache: Mamba2Cache, dims: Mamba2Dims
+                  ) -> tuple[Array, Mamba2Cache]:
+    """x: (B, 1, d_model); O(1) recurrent update."""
+    bsz = x.shape[0]
+    proj = x @ p["in_proj"]
+    z, xbc, dt = _split_proj(proj, dims)
+    window = jnp.concatenate([cache.conv, xbc], axis=1)  # (B, K, C)
+    conv_out = jnp.sum(window * p["conv_w"][None], axis=1, keepdims=True) + p["conv_b"]
+    xbc = jax.nn.silu(conv_out)
+    f32 = lambda t: t.astype(jnp.float32)
+    xh = f32(xbc[..., : dims.d_inner]).reshape(bsz, dims.n_heads, dims.head_dim)
+    bvec = f32(xbc[:, 0, dims.d_inner : dims.d_inner + dims.d_state])
+    cvec = f32(xbc[:, 0, dims.d_inner + dims.d_state :])
+    dt = jax.nn.softplus(f32(dt[:, 0]) + f32(p["dt_bias"]))  # (B,H)
+    a = -jnp.exp(f32(p["a_log"]))
+    decay = jnp.exp(a[None] * dt)  # (B,H)
+    h = f32(cache.h) * decay[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, bvec, xh)
+    y = jnp.einsum("bhpn,bn->bhp", h, cvec) + f32(p["d_skip"])[None, :, None] * xh
+    y = y.astype(x.dtype).reshape(bsz, 1, dims.d_inner) * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y)
+    return y @ p["out_proj"], Mamba2Cache(h=h, conv=window[:, 1:])

@@ -1,0 +1,64 @@
+"""Virtual tokens — the paper's virtual-node mechanism adapted to transformers.
+
+DESIGN.md §4: an *ordered* set of C global summary tokens per layer plays the
+role FastEGNN's virtual nodes play on geometric graphs:
+
+  read  (≙ Eqs. 5+16/17): each channel c gathers a gated mean of the sequence
+        — a pure Σ over tokens, so under sequence/context sharding GSPMD
+        lowers it to exactly one small all-reduce per layer (the DistEGNN
+        bridge; C·d floats, independent of S);
+  write (≙ the virtual term of Eq. 6): every position receives a per-channel
+        gated combination of the virtual states.
+
+Mutual distinctiveness is structural (per-channel parameter stacks, as in
+``core.virtual_nodes``); there is no geometric MMD analogue — global
+distributedness is instead encouraged by the read-gate entropy (logged, not
+regularised, by default).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.basic import dense_init
+
+Array = jax.Array
+
+
+def init_virtual_tokens(key, n_channels: int, d_model: int, d_virtual: int):
+    ks = jax.random.split(key, 5)
+
+    def stack(k, din, dout, scale=None):
+        return jnp.stack([dense_init(kk, din, dout, scale) for kk in jax.random.split(k, n_channels)])
+
+    return {
+        "vt_init": 0.02 * jax.random.normal(ks[0], (n_channels, d_virtual)),
+        "w_read_gate": stack(ks[1], d_model, 1, 0.02),  # (C, d, 1)
+        "w_read": stack(ks[2], d_model, d_virtual),  # (C, d, dv)
+        "w_write_gate": stack(ks[3], d_model, 1, 0.02),  # (C, d, 1)
+        "w_write": stack(ks[4], d_virtual, d_model),  # (C, dv, d)
+    }
+
+
+def virtual_token_layer(p, x: Array, vt: Array, mask: Array | None = None
+                        ) -> tuple[Array, Array]:
+    """x: (B, S, d); vt: (B, C, dv); mask: (B, S) or None.
+
+    Returns (x + write, vt + read).  All sequence reductions are sums —
+    psum-able when S is sharded.
+    """
+    if mask is None:
+        mask = jnp.ones(x.shape[:2], x.dtype)
+    g_read = jax.nn.sigmoid(jnp.einsum("bsd,cdk->bsck", x, p["w_read_gate"]))[..., 0]
+    g_read = g_read * mask[:, :, None]  # (B, S, C)
+    num = jnp.einsum("bsc,bsd,cdv->bcv", g_read, x, p["w_read"])
+    den = jnp.sum(g_read, axis=1)[..., None] + 1e-6  # (B, C, 1)
+    vt_new = vt + num / den
+
+    g_write = jax.nn.sigmoid(jnp.einsum("bsd,cdk->bsck", x, p["w_write_gate"]))[..., 0]
+    add = jnp.einsum("bsc,bcv,cvd->bsd", g_write, vt_new, p["w_write"]) / vt.shape[1]
+    return x + add * mask[..., None], vt_new
+
+
+def init_vt_state(p, batch: int) -> Array:
+    return jnp.broadcast_to(p["vt_init"][None], (batch,) + p["vt_init"].shape)

@@ -1,0 +1,171 @@
+"""xLSTM blocks (Beck et al., 2024): mLSTM (matrix memory) and sLSTM (scalar).
+
+Both use exponential gating with the max-state stabiliser; recurrences run as
+``lax.scan`` over time (O(1)-state decode reuses the same cell).  The mLSTM
+block carries matrix memory C ∈ R^{P×P} per head; sLSTM keeps scalar cells.
+Blocks include the paper's pre-up-projection (mLSTM, pf=2) /
+post-up-projection (sLSTM, pf=4/3) structure, so d_ff=0 at the model level.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.basic import dense_init, init_rmsnorm, rmsnorm
+
+Array = jax.Array
+
+
+class XLSTMDims(NamedTuple):
+    d_model: int
+    n_heads: int
+    d_inner: int  # mLSTM: pf * d_model
+    head_dim: int
+
+
+def xlstm_dims(d_model: int, n_heads: int, pf: int = 2) -> XLSTMDims:
+    d_inner = pf * d_model
+    return XLSTMDims(d_model=d_model, n_heads=n_heads, d_inner=d_inner,
+                     head_dim=d_inner // n_heads)
+
+
+# ------------------------------------------------------------------- mLSTM
+def init_mlstm(key, dims: XLSTMDims):
+    ks = jax.random.split(key, 8)
+    di = dims.d_inner
+    return {
+        "up_x": dense_init(ks[0], dims.d_model, di),
+        "up_z": dense_init(ks[1], dims.d_model, di),
+        "wq": dense_init(ks[2], di, di),
+        "wk": dense_init(ks[3], di, di),
+        "wv": dense_init(ks[4], di, di),
+        "w_if": dense_init(ks[5], di, 2 * dims.n_heads, scale=0.02),
+        "b_if": jnp.concatenate([jnp.zeros(dims.n_heads), 3.0 * jnp.ones(dims.n_heads)]),
+        "norm": init_rmsnorm(di),
+        "down": dense_init(ks[6], di, dims.d_model),
+    }
+
+
+def _mlstm_cell(carry, inp):
+    """carry: (C (B,H,P,P), n (B,H,P), m (B,H)); inp: q,k,v (B,H,P), i,f (B,H)."""
+    c, n, m = carry
+    q, k, v, log_i, log_f = inp
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_g = jnp.exp(log_i - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    c = f_g[..., None, None] * c + i_g[..., None, None] * (v[..., :, None] * k[..., None, :])
+    n = f_g[..., None] * n + i_g[..., None] * k
+    qn = jnp.abs(jnp.einsum("bhp,bhp->bh", n, q))
+    denom = jnp.maximum(qn, jnp.exp(-m_new))[..., None]
+    h = jnp.einsum("bhpq,bhq->bhp", c, q) / denom
+    return (c, n, m_new), h
+
+
+def _mlstm_scan(q, k, v, log_i, log_f, state):
+    """q/k/v: (B,S,H,P); gates: (B,S,H).  Returns h (B,S,H,P), final state."""
+    sw = lambda a: jnp.moveaxis(a, 1, 0)  # time-major for scan
+    state, hs = jax.lax.scan(_mlstm_cell, state,
+                             (sw(q), sw(k), sw(v), sw(log_i), sw(log_f)))
+    return jnp.moveaxis(hs, 0, 1), state
+
+
+class MLSTMState(NamedTuple):
+    c: Array  # (B, H, P, P)
+    n: Array  # (B, H, P)
+    m: Array  # (B, H)
+
+
+def init_mlstm_state(batch: int, dims: XLSTMDims, dtype=jnp.float32) -> MLSTMState:
+    h, p = dims.n_heads, dims.head_dim
+    return MLSTMState(c=jnp.zeros((batch, h, p, p), dtype),
+                      n=jnp.zeros((batch, h, p), dtype),
+                      m=jnp.full((batch, h), -1e30, dtype))
+
+
+def _mlstm_inner(p, x: Array, dims: XLSTMDims, state: MLSTMState):
+    bsz, s, _ = x.shape
+    xi = x @ p["up_x"]
+    z = x @ p["up_z"]
+    shp = (bsz, s, dims.n_heads, dims.head_dim)
+    # the recurrence runs in fp32 for stability (exponential gating)
+    f32 = lambda a: a.astype(jnp.float32)
+    q = f32((xi @ p["wq"]).reshape(shp)) / (dims.head_dim ** 0.5)
+    k = f32((xi @ p["wk"]).reshape(shp)) / (dims.head_dim ** 0.5)
+    v = f32((xi @ p["wv"]).reshape(shp))
+    gates = f32(xi @ p["w_if"]) + f32(p["b_if"])
+    log_i = gates[..., : dims.n_heads]  # exponential input gate (log space)
+    log_f = jax.nn.log_sigmoid(gates[..., dims.n_heads :])
+    h, state = _mlstm_scan(q, k, v, log_i, log_f, tuple(f32(s_) for s_ in state))
+    h = h.reshape(bsz, s, dims.d_inner).astype(x.dtype)
+    out = rmsnorm(p["norm"], h) * jax.nn.silu(z)
+    return out @ p["down"], MLSTMState(*state)
+
+
+def mlstm_forward(p, x: Array, dims: XLSTMDims) -> Array:
+    state = init_mlstm_state(x.shape[0], dims, x.dtype)
+    return _mlstm_inner(p, x, dims, state)[0]
+
+
+def mlstm_decode(p, x: Array, state: MLSTMState, dims: XLSTMDims):
+    return _mlstm_inner(p, x, dims, state)
+
+
+# ------------------------------------------------------------------- sLSTM
+def init_slstm(key, dims: XLSTMDims):
+    ks = jax.random.split(key, 6)
+    d = dims.d_model
+    d_ff = int(4 * d / 3)
+    return {
+        "w_zifo": dense_init(ks[0], d, 4 * d, scale=0.02),
+        "b_zifo": jnp.zeros((4 * d,)),
+        "norm": init_rmsnorm(d),
+        "ff_up": dense_init(ks[1], d, d_ff),
+        "ff_down": dense_init(ks[2], d_ff, d),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: Array  # (B, d)
+    n: Array  # (B, d)
+    m: Array  # (B, d)
+
+
+def init_slstm_state(batch: int, d: int, dtype=jnp.float32) -> SLSTMState:
+    return SLSTMState(c=jnp.zeros((batch, d), dtype), n=jnp.zeros((batch, d), dtype),
+                      m=jnp.full((batch, d), -1e30, dtype))
+
+
+def _slstm_cell(carry, inp):
+    c, n, m = carry
+    z, log_i, log_f, o = inp
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_g = jnp.exp(log_i - m_new)
+    f_g = jnp.exp(log_f + m - m_new)
+    c = f_g * c + i_g * jnp.tanh(z)
+    n = f_g * n + i_g
+    h = jax.nn.sigmoid(o) * c / jnp.maximum(n, 1e-6)
+    return (c, n, m_new), h
+
+
+def _slstm_inner(p, x: Array, state: SLSTMState):
+    bsz, s, d = x.shape
+    zifo = (x @ p["w_zifo"]).astype(jnp.float32) + p["b_zifo"].astype(jnp.float32)
+    z, i, f, o = jnp.split(zifo, 4, axis=-1)
+    log_f = jax.nn.log_sigmoid(f)
+    sw = lambda a: jnp.moveaxis(a, 1, 0)
+    state = tuple(s_.astype(jnp.float32) for s_ in state)
+    state, hs = jax.lax.scan(_slstm_cell, state, (sw(z), sw(i), sw(log_f), sw(o)))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    h = rmsnorm(p["norm"], h)
+    h = jax.nn.gelu(h @ p["ff_up"]) @ p["ff_down"]
+    return h, SLSTMState(*state)
+
+
+def slstm_forward(p, x: Array) -> Array:
+    return _slstm_inner(p, x, init_slstm_state(x.shape[0], x.shape[-1], x.dtype))[0]
+
+
+def slstm_decode(p, x: Array, state: SLSTMState):
+    return _slstm_inner(p, x, state)

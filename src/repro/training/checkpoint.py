@@ -1,0 +1,49 @@
+"""Checkpointing: pytree ↔ .npz with path-flattened keys (no orbax needed).
+
+Handles params, optimizer state, and arbitrary metadata; restores exact
+pytree structure by round-tripping through ``jax.tree_util`` key paths.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in leaves_with_paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, tree: Any, metadata: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez_compressed(path, __meta__=json.dumps(metadata or {}), **flat)
+
+
+def restore_checkpoint(path: str, like: Any) -> tuple[Any, dict]:
+    """Restore into the structure of ``like`` (a template pytree)."""
+    with np.load(path, allow_pickle=False) as data:
+        meta = json.loads(str(data["__meta__"]))
+        flat = {k: data[k] for k in data.files if k != "__meta__"}
+    template_flat = _flatten(like)
+    missing = set(template_flat) - set(flat)
+    extra = set(flat) - set(template_flat)
+    if missing or extra:
+        raise ValueError(f"checkpoint mismatch: missing={sorted(missing)[:5]} extra={sorted(extra)[:5]}")
+    leaves_with_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    new_leaves = []
+    for path, leaf in leaves_with_paths:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p)))) for p in path)
+        arr = flat[key]
+        if arr.shape != np.shape(leaf):
+            raise ValueError(f"shape mismatch at {key}: {arr.shape} vs {np.shape(leaf)}")
+        new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype if hasattr(leaf, "dtype") else None))
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), meta

@@ -1,0 +1,86 @@
+"""Language-model training step: next-token CE + MoE aux loss + Adam."""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.archs.config import ArchConfig
+from repro.archs.model import forward, lm_head_weights
+from repro.training.optim import Adam
+
+Array = jax.Array
+
+
+def lm_loss(params, cfg: ArchConfig, tokens: Array, labels: Array, *,
+            audio: Optional[Array] = None, images: Optional[Array] = None,
+            aux_weight: float = 0.01):
+    if cfg.loss_chunk > 0:
+        return _lm_loss_chunked(params, cfg, tokens, labels, audio=audio,
+                                images=images, aux_weight=aux_weight)
+    logits, aux = forward(params, cfg, tokens, audio=audio, images=images)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll) + aux_weight * aux
+    return loss, {"nll": jnp.mean(nll), "aux": aux}
+
+
+def _lm_loss_chunked(params, cfg: ArchConfig, tokens: Array, labels: Array, *,
+                     audio: Optional[Array] = None,
+                     images: Optional[Array] = None, aux_weight: float = 0.01):
+    """Fused chunked softmax-xent (§Perf beyond-paper treatment).
+
+    Never materialises the fp32 (B, S, V) logits: the LM head matmul and the
+    cross-entropy run per sequence-chunk under ``jax.checkpoint``, so both
+    forward and backward hold one (B, chunk, V) slab at a time.  Exact same
+    loss value as ``lm_loss`` (log-softmax is per-position)."""
+    hidden, aux = forward(params, cfg, tokens, audio=audio, images=images,
+                          return_hidden=True)
+    head = lm_head_weights(params, cfg, hidden.dtype)  # (d, V)
+    b, s, _ = hidden.shape
+    ck = min(cfg.loss_chunk, s)
+    n_chunks = (s + ck - 1) // ck
+    pad = n_chunks * ck - s
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+    valid = jnp.arange(n_chunks * ck) < s  # mask out the pad tail
+    hc = hidden.reshape(b, n_chunks, ck, -1).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n_chunks, ck).transpose(1, 0, 2)
+    mc = jnp.broadcast_to(valid.reshape(n_chunks, 1, ck), (n_chunks, b, ck))
+
+    @jax.checkpoint
+    def chunk_nll(h, y, m):
+        logits = (h @ head).astype(jnp.float32)  # (B, ck, V)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+        return jnp.sum(nll * m)
+
+    def body(carry, xs):
+        h, y, m = xs
+        return carry + chunk_nll(h, y, m), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc, mc))
+    nll = total / (b * s)
+    loss = nll + aux_weight * aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+def make_train_step(cfg: ArchConfig, opt: Adam) -> Callable:
+    """(params, opt_state, batch) → (params, opt_state, metrics).
+
+    ``batch`` is a dict with 'tokens', 'labels' (+ 'audio'/'images' stubs for
+    the multimodal backbones).  This is the function the dry-run lowers.
+    """
+
+    def train_step(params, opt_state, batch):
+        (loss, parts), grads = jax.value_and_grad(lm_loss, has_aux=True)(
+            params, cfg, batch["tokens"], batch["labels"],
+            audio=batch.get("audio"), images=batch.get("images"))
+        params, opt_state = opt.update(grads, opt_state, params)
+        parts = dict(parts)
+        parts["loss"] = loss
+        return params, opt_state, parts
+
+    return train_step

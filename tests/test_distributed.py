@@ -1,0 +1,201 @@
+"""DistEGNN tests.  The multi-device cases run in a subprocess with forced
+host devices (so the main pytest process keeps the single CPU device)."""
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.fluid import generate_fluid_dataset
+from repro.data.partition import (dynamic_radius, metis_like_partition,
+                                  partition_sample, random_partition)
+from repro.data.radius_graph import radius_graph
+
+
+def _run_sub(code: str, n_dev: int = 4) -> str:
+    env = {"XLA_FLAGS": f"--xla_force_host_platform_device_count={n_dev}",
+           "PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+    import os
+    env.update({k: v for k, v in os.environ.items()
+                if k not in env and k != "XLA_FLAGS"})
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, cwd="/root/repo")
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_partition_balanced():
+    rng = np.random.default_rng(0)
+    a = random_partition(rng, 103, 4)
+    counts = np.bincount(a, minlength=4)
+    assert counts.max() - counts.min() <= 1
+
+
+def test_metis_like_partition_prefers_locality():
+    data = generate_fluid_dataset(1, n_particles=300)[0]
+    snd, rcv = radius_graph(data.x0, 0.05)
+    am = metis_like_partition(data.x0, snd, rcv, 4)
+    ar = random_partition(np.random.default_rng(0), 300, 4)
+
+    def internal(assign):
+        return float(np.mean(assign[snd] == assign[rcv]))
+
+    assert internal(am) > internal(ar)  # METIS-like keeps more internal edges
+    counts = np.bincount(am, minlength=4)
+    assert counts.max() <= int(np.ceil(300 / 4)) + 1
+
+
+def test_partition_sample_shapes():
+    data = generate_fluid_dataset(1, n_particles=200)[0]
+    pg = partition_sample(data.x0, data.v0, data.h, data.x1, d=4, r=0.05)
+    assert pg.x.shape[0] == 4
+    assert pg.node_mask.sum() == 200
+    # local indices stay within shard capacity
+    assert int(pg.senders.max()) < pg.x.shape[1]
+
+
+def test_dynamic_radius_recovers_edges():
+    """Table VII: growing the cutoff restores the single-device edge count."""
+    data = generate_fluid_dataset(1, n_particles=250)[0]
+    r0 = 0.035
+    snd, _ = radius_graph(data.x0, r0)
+    target = snd.size
+    assign = random_partition(np.random.default_rng(0), 250, 4)
+    r_dyn = dynamic_radius(data.x0, assign, 4, r0, target, step=0.002)
+    assert r_dyn > r0
+    total = 0
+    for p in range(4):
+        s, _ = radius_graph(data.x0[assign == p], r_dyn)
+        total += s.size
+    assert total >= 0.9 * target
+
+
+@pytest.mark.slow
+def test_dist_equals_single_device():
+    """DistEGNN(D=4) output == single-device FastEGNN on the union graph,
+    and the synced virtual state is bit-identical across shards."""
+    out = _run_sub("""
+        import jax, numpy as np, jax.numpy as jnp, json
+        from repro.data.fluid import generate_fluid_dataset
+        from repro.data.partition import partition_sample
+        from repro.distributed.dist_egnn import (make_gnn_mesh, stack_partitions,
+                                                 build_dist_apply)
+        from repro.models.fast_egnn import FastEGNNConfig, init_fast_egnn, fast_egnn_apply
+        from repro.core.graph import make_graph
+        D = 4
+        data = generate_fluid_dataset(1, n_particles=200)
+        pgs = [partition_sample(s.x0, s.v0, s.h, s.x1, d=D, r=0.05, seed=i)
+               for i, s in enumerate(data)]
+        sb = stack_partitions(pgs)
+        cfg = FastEGNNConfig(n_layers=2, hidden=32, h_in=1, n_virtual=3, s_dim=16)
+        params = init_fast_egnn(jax.random.PRNGKey(0), cfg)
+        mesh = make_gnn_mesh(D)
+        x_pred, vs = build_dist_apply(cfg, mesh)(params, sb)
+        pg = pgs[0]
+        xs, vs_, hs, snds, rcvs, offs = [], [], [], [], [], 0
+        for d in range(D):
+            nm = pg.node_mask[d] > 0; n_d = int(nm.sum())
+            xs.append(pg.x[d][:n_d]); vs_.append(pg.v[d][:n_d]); hs.append(pg.h[d][:n_d])
+            em = pg.edge_mask[d] > 0
+            snds.append(pg.senders[d][em] + offs); rcvs.append(pg.receivers[d][em] + offs)
+            offs += n_d
+        g = make_graph(np.concatenate(xs), np.concatenate(vs_), np.concatenate(hs),
+                       np.concatenate(snds), np.concatenate(rcvs))
+        x_ref, _, vs_ref = fast_egnn_apply(params, cfg, g)
+        x_dist = np.concatenate([np.asarray(x_pred[d, 0])[pg.node_mask[d] > 0]
+                                 for d in range(D)])
+        print(json.dumps({
+            "x_err": float(np.abs(x_dist - np.asarray(x_ref)).max()),
+            "z_err": float(np.abs(np.asarray(vs.z[0, 0]) - np.asarray(vs_ref.z)).max()),
+            "z_sync": float(jnp.max(jnp.abs(vs.z - vs.z[0:1]))),
+        }))
+    """)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["x_err"] < 1e-5, res
+    assert res["z_err"] < 1e-5, res
+    assert res["z_sync"] == 0.0, res
+
+
+@pytest.mark.slow
+def test_dist_train_step_decreases_loss():
+    out = _run_sub("""
+        import jax, json
+        from repro.data.fluid import generate_fluid_dataset
+        from repro.data.partition import partition_sample
+        from repro.distributed.dist_egnn import (make_gnn_mesh, stack_partitions,
+                                                 build_dist_train_step)
+        from repro.models.fast_egnn import FastEGNNConfig, init_fast_egnn
+        from repro.training.optim import Adam
+        D = 4
+        data = generate_fluid_dataset(2, n_particles=160)
+        pgs = [partition_sample(s.x0, s.v0, s.h, s.x1, d=D, r=0.05, seed=i)
+               for i, s in enumerate(data)]
+        sb = stack_partitions(pgs)
+        cfg = FastEGNNConfig(n_layers=2, hidden=32, h_in=1, n_virtual=3, s_dim=16)
+        params = init_fast_egnn(jax.random.PRNGKey(0), cfg)
+        mesh = make_gnn_mesh(D)
+        opt = Adam(lr=1e-3)
+        ts, lf = build_dist_train_step(cfg, mesh, opt, lam_mmd=0.01)
+        st = opt.init(params)
+        l0 = float(lf(params, sb))
+        p = params
+        for _ in range(8):
+            p, st, loss = ts(p, st, sb)
+        print(json.dumps({"l0": l0, "l1": float(loss)}))
+    """)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["l1"] < res["l0"], res
+
+
+@pytest.mark.slow
+def test_dist_gradients_match_single_device():
+    """The paper's custom differentiable all_reduce requirement: grads through
+    the psum'd virtual aggregation must equal single-device grads."""
+    out = _run_sub("""
+        import jax, numpy as np, jax.numpy as jnp, json
+        from repro.data.fluid import generate_fluid_dataset
+        from repro.data.partition import partition_sample
+        from repro.distributed.dist_egnn import (make_gnn_mesh, stack_partitions,
+                                                 build_dist_train_step)
+        from repro.models.fast_egnn import FastEGNNConfig, init_fast_egnn, fast_egnn_apply
+        from repro.training.losses import masked_mse
+        from repro.training.optim import Adam
+        from repro.core.graph import make_graph
+        D = 2
+        data = generate_fluid_dataset(1, n_particles=100)
+        pgs = [partition_sample(s.x0, s.v0, s.h, s.x1, d=D, r=0.06, seed=i)
+               for i, s in enumerate(data)]
+        sb = stack_partitions(pgs)
+        cfg = FastEGNNConfig(n_layers=2, hidden=16, h_in=1, n_virtual=2, s_dim=8)
+        params = init_fast_egnn(jax.random.PRNGKey(0), cfg)
+        mesh = make_gnn_mesh(D)
+        opt = Adam(lr=1e-3)
+        _, lf = build_dist_train_step(cfg, mesh, opt, lam_mmd=0.0)
+        gd = jax.grad(lambda p: lf(p, sb))(params)
+        # single-device reference on the union graph
+        pg = pgs[0]
+        xs, vs_, hs, snds, rcvs, tgt, offs = [], [], [], [], [], [], 0
+        for d in range(D):
+            nm = pg.node_mask[d] > 0; n_d = int(nm.sum())
+            xs.append(pg.x[d][:n_d]); vs_.append(pg.v[d][:n_d]); hs.append(pg.h[d][:n_d])
+            tgt.append(pg.x_target[d][:n_d])
+            em = pg.edge_mask[d] > 0
+            snds.append(pg.senders[d][em] + offs); rcvs.append(pg.receivers[d][em] + offs)
+            offs += n_d
+        g = make_graph(np.concatenate(xs), np.concatenate(vs_), np.concatenate(hs),
+                       np.concatenate(snds), np.concatenate(rcvs))
+        x_t = jnp.asarray(np.concatenate(tgt))
+        def single_loss(p):
+            x, _, _ = fast_egnn_apply(p, cfg, g)
+            return masked_mse(x, x_t, g.node_mask)
+        gs = jax.grad(single_loss)(params)
+        rel = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b)) /
+                                              (jnp.max(jnp.abs(b)) + 1e-8)), gd, gs)
+        print(json.dumps({"max_rel": jax.tree.reduce(max, rel)}))
+    """)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["max_rel"] < 5e-3, res

@@ -1,0 +1,129 @@
+"""Property tests: E(3)/SO(3) equivariance of every geometric model
+(Proposition IV.1) and permutation invariance of the virtual state."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.equivariant import apply_e3, random_orthogonal, random_rotation
+from repro.core.graph import make_graph
+from repro.core.mmd import mmd_loss
+from repro.models.registry import make_model
+
+N, E, HIN = 18, 50, 2
+
+
+def _graph(seed=0):
+    k = jax.random.PRNGKey(seed)
+    kx, kv, kh, ks, kr = jax.random.split(k, 5)
+    return make_graph(
+        jax.random.normal(kx, (N, 3)),
+        jax.random.normal(kv, (N, 3)),
+        jax.random.normal(kh, (N, HIN)),
+        jax.random.randint(ks, (E,), 0, N),
+        jax.random.randint(kr, (E,), 0, N),
+    )
+
+
+MODELS = {
+    "linear": {},
+    "egnn": dict(h_in=HIN, n_layers=2, hidden=16),
+    "fast_egnn": dict(h_in=HIN, n_layers=2, hidden=16, n_virtual=3, s_dim=8),
+    "rf": dict(n_layers=2, hidden=16),
+    "fast_rf": dict(n_layers=2, hidden=16, n_virtual=2),
+    "schnet": dict(h_in=HIN, n_layers=2, hidden=16),
+    "fast_schnet": dict(h_in=HIN, n_layers=2, hidden=16, n_virtual=2, s_dim=8),
+    "tfn": dict(h_in=HIN, n_layers=2, hidden=16),
+    "fast_tfn": dict(h_in=HIN, n_layers=2, hidden=16, n_virtual=2, s_dim=8),
+}
+# TFN's cross-product path is chiral: SO(3) only (like the paper's TFN).
+SO3_ONLY = {"tfn", "fast_tfn"}
+
+
+@pytest.mark.parametrize("name", sorted(MODELS))
+@given(seed=st.integers(0, 100))
+@settings(max_examples=8, deadline=None)
+def test_e3_equivariance(name, seed):
+    g = _graph(0)
+    cfg, params, apply_full = make_model(name, jax.random.PRNGKey(1), **MODELS[name])
+    kk = jax.random.PRNGKey(seed)
+    rot = random_rotation(kk) if name in SO3_ONLY else random_orthogonal(kk)
+    t = jax.random.normal(jax.random.fold_in(kk, 1), (3,)) * 3.0
+
+    x1, _ = apply_full(params, cfg, g)
+    g2 = g._replace(x=apply_e3(g.x, rot, t), v=g.v @ rot)
+    x2, _ = apply_full(params, cfg, g2)
+    np.testing.assert_allclose(np.asarray(x2), np.asarray(apply_e3(x1, rot, t)),
+                               rtol=2e-3, atol=2e-3)
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_virtual_state_equivariant_and_perm_invariant(seed):
+    """Prop IV.1: Z is E(3)-equivariant AND permutation-invariant w.r.t. X."""
+    g = _graph(0)
+    cfg, params, apply_full = make_model(
+        "fast_egnn", jax.random.PRNGKey(1), h_in=HIN, n_layers=2, hidden=16,
+        n_virtual=3, s_dim=8)
+    _, aux1 = apply_full(params, cfg, g)
+    kk = jax.random.PRNGKey(seed)
+    rot = random_orthogonal(kk)
+    t = jax.random.normal(jax.random.fold_in(kk, 1), (3,))
+    _, aux2 = apply_full(params, cfg, g._replace(x=apply_e3(g.x, rot, t), v=g.v @ rot))
+    np.testing.assert_allclose(np.asarray(aux2["virtual"].z),
+                               np.asarray(apply_e3(aux1["virtual"].z, rot, t)),
+                               rtol=2e-3, atol=2e-3)
+    # permutation of real nodes leaves Z unchanged
+    perm = jax.random.permutation(kk, N)
+    inv = jnp.argsort(perm)
+    gp = g._replace(x=g.x[perm], v=g.v[perm], h=g.h[perm],
+                    senders=inv[g.senders], receivers=inv[g.receivers])
+    xp, auxp = apply_full(params, cfg, gp)
+    np.testing.assert_allclose(np.asarray(auxp["virtual"].z),
+                               np.asarray(aux1["virtual"].z), rtol=2e-3, atol=2e-3)
+    # ... while X' is permutation-equivariant
+    x1, _ = apply_full(params, cfg, g)
+    np.testing.assert_allclose(np.asarray(xp), np.asarray(x1[perm]),
+                               rtol=2e-3, atol=2e-3)
+
+
+@given(seed=st.integers(0, 1000), sigma=st.floats(0.5, 3.0))
+@settings(max_examples=15, deadline=None)
+def test_mmd_e3_invariant(seed, sigma):
+    kk = jax.random.PRNGKey(seed)
+    z = jax.random.normal(kk, (4, 3))
+    x = jax.random.normal(jax.random.fold_in(kk, 1), (20, 3))
+    mask = jnp.ones((20,))
+    rot = random_orthogonal(jax.random.fold_in(kk, 2))
+    t = jnp.array([0.3, -1.0, 2.0])
+    m1 = mmd_loss(z, x, mask, sigma=sigma)
+    m2 = mmd_loss(apply_e3(z, rot, t), apply_e3(x, rot, t), mask, sigma=sigma)
+    np.testing.assert_allclose(float(m1), float(m2), rtol=1e-4, atol=1e-5)
+
+
+def test_mmd_drives_distributedness():
+    """Gradient descent on MMD spreads CoM-initialised virtual nodes over the reals.
+
+    Paper-faithful setup: Eq. 2 initialises Z at the CoM of the real nodes
+    (never far from the cloud), so the RBF cross-term gradient is live.  The
+    MMD objective must (a) decrease, (b) keep the virtual nodes inside the
+    point cloud (global distributedness), and (c) push them apart
+    (mutual distinctiveness, the k(z_i,z_j) repulsion term).
+    """
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 3)) * 2.0
+    com = x.mean(0)
+    z = com[None, :] + 0.05 * jax.random.normal(jax.random.PRNGKey(1), (3, 3))
+    mask = jnp.ones((64,))
+    loss = lambda z: mmd_loss(z, x, mask, sigma=1.5)
+    l0 = float(loss(z))
+    d0 = float(jnp.mean(jnp.linalg.norm(z[:, None] - z[None, :], axis=-1)))
+    for _ in range(200):
+        z = z - 0.5 * jax.grad(loss)(z)
+    assert float(loss(z)) < l0
+    # (b) virtual nodes stayed inside the point cloud
+    assert float(jnp.max(jnp.linalg.norm(z - com, axis=-1))) < float(
+        jnp.max(jnp.linalg.norm(x - com, axis=-1)))
+    # (c) mutual distinctiveness: the set spread out from its collapsed init
+    d1 = float(jnp.mean(jnp.linalg.norm(z[:, None] - z[None, :], axis=-1)))
+    assert d1 > d0

@@ -1,0 +1,126 @@
+"""Per-kernel shape/dtype sweeps: pallas_call(interpret=True) ≍ ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.virtual_nodes import (VirtualState, init_virtual_block,
+                                      real_from_virtual, virtual_global_message,
+                                      virtual_messages, virtual_node_sums)
+from repro.kernels import ops as kops
+from repro.kernels import ref
+from repro.kernels.mmd_rbf import mmd_cross_sum
+from repro.kernels.swa_attention import swa_attention
+from repro.kernels.virtual_message import virtual_pathway_fused
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("n,c,dh,hid", [(64, 1, 8, 16), (100, 3, 32, 32),
+                                        (257, 10, 16, 64), (512, 5, 64, 64)])
+def test_virtual_pathway_kernel_shapes(n, c, dh, hid):
+    ks = jax.random.split(jax.random.PRNGKey(n + c), 8)
+    x = jax.random.normal(ks[0], (n, 3))
+    h = jax.random.normal(ks[1], (n, dh))
+    z = jax.random.normal(ks[2], (c, 3))
+    s = jax.random.normal(ks[3], (c, 16))
+    mask = (jax.random.uniform(ks[4], (n,)) > 0.1).astype(jnp.float32)
+    mv = virtual_global_message(z, x.mean(0))
+    vb = init_virtual_block(ks[5], c, dh, 16, hid)
+    vs = VirtualState(z=z, s=s)
+
+    w = kops.unpack_virtual_block(vb, s, mv, dh)
+    flat = (x, h, z, mask, w["w1h"], w["w1d"], w["const1"], w["w2"], w["b2"],
+            w["wg1"], w["bg1"], w["wg2"], w["wz1"], w["bz1"], w["wz2"])
+    got = virtual_pathway_fused(*flat, block_n=128, interpret=True)
+    want = ref.virtual_pathway_ref(*flat)
+    for g, r in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r), rtol=1e-4, atol=1e-4)
+
+    # and both match the model's jnp path
+    msgs = virtual_messages(vb, h, x, vs, mv)
+    dx, mh = real_from_virtual(vb, x, vs, msgs)
+    dz, ms = virtual_node_sums(vb, x, vs, msgs, mask)
+    for g, r in zip(got, (dx, mh, dz, ms)):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(r), rtol=1e-3, atol=1e-3)
+
+
+def test_virtual_pathway_kernel_grads():
+    n, c, dh, hid = 96, 3, 16, 32
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+    x = jax.random.normal(ks[0], (n, 3))
+    h = jax.random.normal(ks[1], (n, dh))
+    z = jax.random.normal(ks[2], (c, 3))
+    s = jax.random.normal(ks[3], (c, 8))
+    mask = jnp.ones((n,))
+    mv = virtual_global_message(z, x.mean(0))
+    vb = init_virtual_block(ks[5], c, dh, 8, hid)
+    vs = VirtualState(z=z, s=s)
+
+    def loss_kernel(vb, x):
+        dx, mh, dz, ms = kops.virtual_pathway(vb, h, x, vs, mv, mask)
+        return jnp.sum(dx**2) + jnp.sum(mh**2) + jnp.sum(dz**2) + jnp.sum(ms**2)
+
+    def loss_jnp(vb, x):
+        m = virtual_messages(vb, h, x, vs, mv)
+        dx, mh = real_from_virtual(vb, x, vs, m)
+        dz, ms = virtual_node_sums(vb, x, vs, m, mask)
+        return jnp.sum(dx**2) + jnp.sum(mh**2) + jnp.sum(dz**2) + jnp.sum(ms**2)
+
+    gk = jax.grad(loss_kernel, argnums=(0, 1))(vb, x)
+    gj = jax.grad(loss_jnp, argnums=(0, 1))(vb, x)
+
+    def assert_close(a, b):
+        scale = float(jnp.max(jnp.abs(b))) + 1e-6
+        np.testing.assert_allclose(np.asarray(a) / scale, np.asarray(b) / scale,
+                                   rtol=1e-4, atol=1e-5)
+
+    jax.tree.map(assert_close, gk, gj)
+
+
+@pytest.mark.parametrize("n,c,sigma,block", [(100, 3, 1.5, 64), (1024, 10, 3.0, 256),
+                                             (33, 1, 0.7, 1024)])
+def test_mmd_kernel(n, c, sigma, block):
+    ks = jax.random.split(jax.random.PRNGKey(n), 3)
+    x = jax.random.normal(ks[0], (n, 3))
+    z = jax.random.normal(ks[1], (c, 3))
+    mask = (jax.random.uniform(ks[2], (n,)) > 0.2).astype(jnp.float32)
+    got = mmd_cross_sum(x, z, mask, sigma=sigma, block_n=block, interpret=True)
+    want = ref.mmd_cross_ref(x, z, mask, sigma)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+@pytest.mark.parametrize("s,h,d,window,causal,bq", [
+    (128, 2, 32, None, True, 64),
+    (256, 2, 64, 64, True, 128),
+    (256, 4, 32, 32, True, 32),
+    (128, 1, 64, None, False, 128),
+    (512, 2, 64, 100, True, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_swa_attention_kernel(s, h, d, window, causal, bq, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(s + h), 3)
+    q = jax.random.normal(ks[0], (h, s, d), dtype)
+    k = jax.random.normal(ks[1], (h, s, d), dtype)
+    v = jax.random.normal(ks[2], (h, s, d), dtype)
+    got = swa_attention(q, k, v, causal=causal, window=window,
+                        block_q=bq, block_k=bq, interpret=True)
+    want = ref.swa_attention_ref(
+        q.astype(jnp.float32).transpose(1, 0, 2),
+        k.astype(jnp.float32).transpose(1, 0, 2),
+        v.astype(jnp.float32).transpose(1, 0, 2), window, causal).transpose(1, 0, 2)
+    np.testing.assert_allclose(np.asarray(got, np.float32), np.asarray(want),
+                               **_tol(dtype))
+
+
+def test_mmd_loss_kernel_matches_core():
+    from repro.core.mmd import mmd_loss
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    x = jax.random.normal(ks[0], (200, 3))
+    z = jax.random.normal(ks[1], (5, 3))
+    mask = jnp.ones((200,))
+    np.testing.assert_allclose(
+        float(kops.mmd_loss_kernel(z, x, mask, sigma=1.5)),
+        float(mmd_loss(z, x, mask, sigma=1.5)), rtol=1e-5)
