@@ -1,21 +1,103 @@
-"""Kernel micro-benchmarks: fused virtual pathway vs unfused jnp path.
+"""Kernel micro-benchmarks: fused virtual + edge pathways vs unfused jnp.
 
-On CPU the Pallas kernel runs in interpret mode (slow), so the relevant
-number is the *jnp-path* timing plus the HBM-traffic model: the fused kernel
-eliminates the (N, C, hidden) message round-trip.  We report both timings and
-the modelled bytes saved.
+On CPU the Pallas kernels run in interpret mode (slow), so the relevant
+number is the *jnp-path* timing plus the HBM-traffic model: the fused
+kernels eliminate the (N, C, hidden) virtual and (E, hidden) edge message
+round-trips.  We report both timings and the modelled bytes saved; the edge
+sweep (N ∈ {1K, 8K, 64K}) is also recorded to ``BENCH_edge_kernel.json``.
+On TPU the fused kernels are timed directly.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit
+from repro.core import message_passing as mp
+from repro.core.graph import make_graph
+from repro.core.mlp import init_mlp
 from repro.core.virtual_nodes import (VirtualState, init_virtual_block,
                                       real_from_virtual, virtual_global_message,
                                       virtual_messages, virtual_node_sums)
+from repro.data.radius_graph import sort_edges_by_receiver
+
+
+def _time(fn, *args, reps: int = 5) -> float:
+    """Mean µs per call of a jitted function (after warmup)."""
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+EDGE_BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_edge_kernel.json")
+
+
+def run_edge(quick: bool = True, deg: int = 8, hid: int = 64,
+             json_path: str | None = None):
+    """Fused edge kernel vs the jnp substrate across graph sizes.
+
+    Synthetic receiver-sorted graphs with mean degree ``deg`` (radius-graph
+    construction is benchmarked elsewhere).  Off-TPU the fused kernel runs
+    in interpret mode, so its timing is only reported on TPU — and only at
+    sizes the one-hot formulation is eligible for (the dispatch bound
+    ``EDGE_KERNEL_MAX_NODES``; above it the kernel path falls back to jnp,
+    which a naive A/B timing would misreport as a kernel number); the jnp
+    timing and the HBM-traffic model are always recorded.
+
+    The full sweep (``quick=False``) is recorded to BENCH_edge_kernel.json;
+    quick runs don't overwrite the committed artifact unless ``json_path``
+    is given explicitly.
+    """
+    on_tpu = jax.default_backend() == "tpu"
+    sizes = [1024] if quick else [1024, 8192, 65536]
+    spec = mp.EdgeSpec(coord_clamp=100.0)
+    rows = []
+    for n in sizes:
+        e = n * deg
+        rng = np.random.default_rng(0)
+        snd = rng.integers(0, n, size=e).astype(np.int32)
+        rcv = rng.integers(0, n, size=e).astype(np.int32)
+        snd, rcv = sort_edges_by_receiver(snd, rcv)
+        ks = jax.random.split(jax.random.PRNGKey(n), 4)
+        x = jax.random.normal(ks[0], (n, 3))
+        h = jax.random.normal(ks[1], (n, hid))
+        g = make_graph(x, None, h, snd, rcv)
+        lp = {"phi1": init_mlp(ks[2], [2 * hid + 1, hid, hid]),
+              "gate": init_mlp(ks[3], [hid, hid, 1], final_bias=False)}
+        eligible = mp.kernel_supported(lp, g, spec)
+
+        t_jnp = _time(jax.jit(lambda lp, h, x: mp.edge_pathway(
+            lp, h, x, g, spec)), lp, h, x)
+        t_kernel = None
+        if on_tpu and eligible:
+            t_kernel = _time(jax.jit(lambda lp, h, x: mp.edge_pathway(
+                lp, h, x, g, spec, use_kernel=True)), lp, h, x)
+        # HBM-traffic model: the unfused path writes + reads the (E, hid)
+        # message tensor and the (E, 3) gated edge vectors
+        saved = e * hid * 4 * 2 + e * 3 * 4 * 2
+        emit(f"kernel/edge_pathway_n{n}_e{e}", t_jnp,
+             f"fused_hbm_saving_bytes={saved};"
+             f"kernel_us={t_kernel if t_kernel is not None else 'n/a'}")
+        rows.append(dict(n=n, e=e, hidden=hid, jnp_us=t_jnp,
+                         kernel_us=t_kernel,
+                         kernel_eligible=eligible,
+                         kernel_mode="tpu" if on_tpu else "interpret-skipped",
+                         fused_hbm_saving_bytes=saved))
+    if json_path is None and not quick:
+        json_path = EDGE_BENCH_JSON
+    if json_path is not None:
+        with open(json_path, "w") as f:
+            json.dump(dict(backend=jax.default_backend(), deg=deg, rows=rows),
+                      f, indent=2)
+    return rows
 
 
 def run(quick: bool = True):
@@ -39,12 +121,7 @@ def run(quick: bool = True):
             dz, ms = virtual_node_sums(vb, x, vs, msgs, mask)
             return dx, mh, dz, ms
 
-        out = unfused(vb, h, x)
-        jax.block_until_ready(out)
-        t0 = time.perf_counter()
-        for _ in range(5):
-            jax.block_until_ready(unfused(vb, h, x))
-        t_unfused = (time.perf_counter() - t0) / 5 * 1e6
+        t_unfused = _time(unfused, vb, h, x)
 
         msg_bytes = n * c * hid * 4 * 2  # write+read of the message tensor
         emit(f"kernel/virtual_pathway_n{n}_c{c}", t_unfused,
@@ -54,3 +131,4 @@ def run(quick: bool = True):
 
 if __name__ == "__main__":
     run(quick=False)
+    run_edge(quick=False)

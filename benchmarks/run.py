@@ -33,7 +33,8 @@ def main() -> None:
         "table6": lambda: table6_partition.run(quick=quick),
         "table7": lambda: table7_dynamic_radius.run(quick=quick),
         "rollout": lambda: rollout.run(quick=quick),
-        "kernel": lambda: kernel_bench.run(quick=quick),
+        "kernel": lambda: (kernel_bench.run(quick=quick),
+                           kernel_bench.run_edge(quick=quick)),
     }
     selected = args.only or list(jobs)
     print("name,us_per_call,derived")

@@ -1,0 +1,187 @@
+"""Shared equivariant message-passing substrate (DESIGN.md §2).
+
+Every model in ``repro.models`` used to hand-roll the same real-real edge
+pathway (Eq. 3 + the real parts of Eqs. 6-7): gather endpoint features,
+run a small MLP over ``[h_i | h_j | ‖x_i−x_j‖² | e_ij]``, gate the edge
+vector with a scalar head, and segment-reduce onto receivers with masked
+degree normalisation.  This module is now the *only* place that pathway —
+and the underlying masked segment reduction — lives:
+
+  * :func:`edge_pathway` — the canonical gather → φ1 → gate → reduce hot
+    path, parameterised by a static :class:`EdgeSpec` so that EGNN (full
+    form), SchNet's Eq. 13 coordinate head (identity gate), RF (geometry
+    only) and MPNN (no geometry) are all instances of one abstraction;
+  * :func:`aggregate_edges` — the masked segment-reduce + degree
+    normalisation primitive for models whose per-edge message does not fit
+    the φ1 form (TFN's Cartesian tensor paths, SchNet's cfconv);
+  * :func:`edge_rel_d2` / :func:`receiver_degree` — shared edge geometry.
+
+When ``use_kernel=True`` and the spec is kernel-eligible (see
+:func:`kernel_supported`), :func:`edge_pathway` dispatches to the fused
+Pallas TPU kernel in ``repro.kernels.edge_message`` which never
+materialises the ``(E, hidden)`` message tensor in HBM; otherwise it runs
+the pure-jnp reference path below.  Both paths are validated against each
+other in ``tests/test_kernels.py`` and ``tests/test_message_passing.py``.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import GeometricGraph
+from repro.core.mlp import mlp
+
+Array = jax.Array
+
+
+class EdgeSpec(NamedTuple):
+    """Static description of one model's edge pathway.
+
+    use_h:       gather ``h_i, h_j`` into the φ1 input (EGNN/SchNet/MPNN).
+    use_d2:      append ``‖x_i−x_j‖²`` to the φ1 input (all but MPNN).
+    use_edge_attr: append ``e_ij`` to the φ1 input — only models whose φ1
+                 is sized for it (EGNN's ``edge_attr_dim``); others ignore
+                 any edge attributes on the graph.
+    gate:        'mlp'      — scalar gate = φ_x(φ1(·)) (EGNN Eq. 6);
+                 'identity' — φ1 itself emits the scalar gate (SchNet
+                              Eq. 13, RF: the message *is* the gate);
+                 'none'     — invariant-only pathway, no coordinate update
+                              (MPNN, SchNet's cfconv).
+    rel:         'raw'    — gate multiplies x_i − x_j (EGNN/SchNet);
+                 'inv1p'  — gate multiplies (x_i − x_j)/(‖x_i−x_j‖+1)
+                            (RF's normalised radial field).
+    coord_clamp: clamp on the scalar gate (numerical stability).
+    normalize:   divide segment sums by the masked receiver degree
+                 (α_i = 1/|N(i)|); ``False`` → plain masked sum (cfconv).
+    """
+
+    use_h: bool = True
+    use_d2: bool = True
+    use_edge_attr: bool = False
+    gate: str = "mlp"
+    rel: str = "raw"
+    coord_clamp: float = math.inf
+    normalize: bool = True
+
+
+class EdgePathwayOut(NamedTuple):
+    dx: Optional[Array]  # (N, 3) coordinate update, None when gate == 'none'
+    mh: Array  # (N, M) aggregated messages
+
+
+def clamp_vector_norm(v: Array, max_norm: float) -> Array:
+    """Equivariantly bound a (..., 3) update: rescale to ``max_norm`` when
+    longer.  Componentwise ``jnp.clip`` would break E(3) equivariance the
+    moment it binds (the clip box is axis-aligned); rescaling by an
+    invariant factor preserves Prop. IV.1."""
+    n = jnp.sqrt(jnp.sum(v * v, axis=-1, keepdims=True) + 1e-12)
+    return v * jnp.minimum(1.0, max_norm / n)
+
+
+def receiver_degree(g: GeometricGraph) -> Array:
+    """Masked in-degree per node: Σ_{e: rcv(e)=i} edge_mask_e, (N,)."""
+    return jax.ops.segment_sum(g.edge_mask, g.receivers,
+                               num_segments=g.n_nodes)
+
+
+def aggregate_edges(values: Array, g: GeometricGraph, *,
+                    normalize: bool = True) -> Array:
+    """Masked segment-reduce of per-edge values onto receivers.
+
+    ``values``: (E, F) — already masked by the caller (multiplied by
+    ``edge_mask``) or intrinsically zero on padded edges.  With
+    ``normalize`` the sum is divided by ``max(deg_i, 1)`` (masked mean —
+    the α_i = 1/|N(i)| aggregation every model here uses).
+    """
+    out = jax.ops.segment_sum(values, g.receivers, num_segments=g.n_nodes)
+    if normalize:
+        inv = 1.0 / jnp.maximum(receiver_degree(g), 1.0)
+        out = out * inv.reshape((-1,) + (1,) * (values.ndim - 1))
+    return out
+
+
+def edge_rel_d2(x: Array, g: GeometricGraph) -> tuple[Array, Array]:
+    """Edge vectors r_e = x_rcv − x_snd (E, 3) and ‖r_e‖² (E, 1)."""
+    rel = x[g.receivers] - x[g.senders]
+    return rel, jnp.sum(rel * rel, axis=-1, keepdims=True)
+
+
+def _phi1_features(h: Array, d2: Array, g: GeometricGraph,
+                   spec: EdgeSpec) -> Array:
+    feats = []
+    if spec.use_h:
+        feats.append(h[g.receivers])
+        feats.append(h[g.senders])
+    if spec.use_d2:
+        feats.append(d2)
+    if spec.use_edge_attr and g.edge_attr.shape[-1] > 0:
+        feats.append(g.edge_attr)
+    return jnp.concatenate(feats, axis=-1)
+
+
+def _scaled_rel(rel: Array, d2: Array, spec: EdgeSpec) -> Array:
+    if spec.rel == "inv1p":
+        # eps inside the sqrt: padded zero-edges otherwise give
+        # d(sqrt)/d(d²) = ∞ and the masked-out gradient becomes 0·∞ = NaN.
+        return rel / (jnp.sqrt(d2 + 1e-12) + 1.0)
+    return rel
+
+
+# VMEM budget of the one-hot gather/scatter formulation: the kernel keeps
+# x/h and two (block_e, N) one-hots resident, so it is only eligible up to
+# this node count (≈8 MB of VMEM at block_e=128, hidden=64).  Larger graphs
+# fall back to jnp until the banded-CSR tiling lands (ROADMAP).
+EDGE_KERNEL_MAX_NODES = 4096
+
+
+def kernel_supported(lp: dict, g: GeometricGraph, spec: EdgeSpec) -> bool:
+    """Kernel-dispatch rule (DESIGN.md §3.2).
+
+    The fused Pallas edge kernel implements exactly: 2-layer φ1 over
+    ``[h_i | h_j | d²]``, 2-layer (or identity) gate, masked mean
+    reduction, on graphs small enough for the one-hot formulation's VMEM
+    residency.  Anything else — extra edge attributes, deeper MLPs,
+    unnormalised sums, oversize graphs — falls back to the jnp path.
+    """
+    if g.n_nodes > EDGE_KERNEL_MAX_NODES:
+        return False
+    if spec.use_edge_attr and g.edge_attr.shape[-1] > 0:
+        return False
+    if not spec.normalize:
+        return False
+    if len(lp["phi1"]) != 2:
+        return False
+    if spec.gate == "mlp" and len(lp.get("gate", ())) != 2:
+        return False
+    return True
+
+
+def edge_pathway(lp: dict, h: Array, x: Array, g: GeometricGraph,
+                 spec: EdgeSpec, *, use_kernel: bool = False) -> EdgePathwayOut:
+    """The unified real-real edge pathway (Eq. 3 + real parts of Eqs. 6-7).
+
+    ``lp`` holds ``"phi1"`` (the message MLP) and, when ``spec.gate ==
+    'mlp'``, ``"gate"`` (the scalar coordinate head).  Returns the
+    degree-normalised (or plain-sum) coordinate update ``dx`` and message
+    aggregate ``mh``; ``dx`` is None for invariant-only specs.
+    """
+    if use_kernel and kernel_supported(lp, g, spec):
+        from repro.kernels import ops as kops
+
+        dx, mh = kops.edge_pathway(lp, h, x, g, spec)
+        return EdgePathwayOut(dx=dx if spec.gate != "none" else None, mh=mh)
+
+    rel, d2 = edge_rel_d2(x, g)
+    msg = mlp(lp["phi1"], _phi1_features(h, d2, g, spec))  # (E, M)
+    em = g.edge_mask[:, None]
+    mh = aggregate_edges(msg * em, g, normalize=spec.normalize)
+    if spec.gate == "none":
+        return EdgePathwayOut(dx=None, mh=mh)
+    gate = mlp(lp["gate"], msg) if spec.gate == "mlp" else msg
+    gate = jnp.clip(gate, -spec.coord_clamp, spec.coord_clamp)
+    dx_e = _scaled_rel(rel, d2, spec) * gate * em
+    dx = aggregate_edges(dx_e, g, normalize=spec.normalize)
+    return EdgePathwayOut(dx=dx, mh=mh)

@@ -8,7 +8,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import GeometricGraph
-from repro.data.radius_graph import drop_longest_edges, pad_edges, pad_nodes, radius_graph
+from repro.data.radius_graph import (drop_longest_edges, pad_edges, pad_nodes,
+                                     radius_graph, sort_edges_by_receiver)
 
 
 class GraphBatch(NamedTuple):
@@ -29,13 +30,16 @@ def sample_to_arrays(
 ):
     snd, rcv = radius_graph(x0, r)
     snd, rcv = drop_longest_edges(x0, snd, rcv, drop_rate)
+    # CSR layout: receiver-sorted real edges, padding tail last — the edge
+    # layout contract of the fused Pallas edge kernel (DESIGN.md §3.1)
+    snd, rcv = sort_edges_by_receiver(snd, rcv)
     node_cap = node_cap or x0.shape[0]
     edge_cap = edge_cap if edge_cap is not None else max(1, snd.size)
     xp, nm = pad_nodes(x0, node_cap)
     vp, _ = pad_nodes(v0, node_cap)
     hp, _ = pad_nodes(h, node_cap)
     tp, _ = pad_nodes(x1, node_cap)
-    sp, rp, em = pad_edges(snd, rcv, edge_cap)
+    sp, rp, em = pad_edges(snd, rcv, edge_cap, x0)
     return dict(x=xp, v=vp, h=hp, senders=sp, receivers=rp, node_mask=nm,
                 edge_mask=em, x_target=tp)
 

@@ -10,7 +10,8 @@ from typing import NamedTuple
 
 import numpy as np
 
-from repro.data.radius_graph import drop_longest_edges, pad_edges, pad_nodes, radius_graph
+from repro.data.radius_graph import (drop_longest_edges, pad_edges, pad_nodes,
+                                     radius_graph, sort_edges_by_receiver)
 
 
 def random_partition(rng: np.random.Generator, n: int, d: int) -> np.ndarray:
@@ -143,6 +144,7 @@ def partition_sample(
         xs, vs, hs, ts = x[idx], v[idx], h[idx], x_target[idx]
         snd, rcv = radius_graph(xs, r)
         snd, rcv = drop_longest_edges(xs, snd, rcv, drop_rate)
+        snd, rcv = sort_edges_by_receiver(snd, rcv)  # CSR layout
         shards.append((xs, vs, hs, ts, snd, rcv))
     if e_cap is None:
         e_cap = max(1, max(s[4].size for s in shards))
@@ -153,7 +155,7 @@ def partition_sample(
         vp, _ = pad_nodes(vs, n_cap)
         hp, _ = pad_nodes(hs, n_cap)
         tp, _ = pad_nodes(ts, n_cap)
-        sp, rp, em = pad_edges(snd, rcv, e_cap)
+        sp, rp, em = pad_edges(snd, rcv, e_cap, xs)
         out["x"].append(xp)
         out["v"].append(vp)
         out["h"].append(hp)

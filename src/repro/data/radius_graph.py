@@ -1,11 +1,14 @@
-"""Host-side radius-graph construction, edge dropping, padding (numpy).
+"""Host-side radius-graph construction, edge dropping, CSR layout, padding.
 
 Graph building is a data-pipeline step (DESIGN.md §6.3): cell-list radius
 search in O(N), distance-sorted edge dropping (the paper drops the top-p
-*longest* edges, Sec. VII-B), and fixed-capacity padding so the jitted model
-sees static shapes.
+*longest* edges, Sec. VII-B), a receiver-sort (CSR) layout pass that feeds
+the fused Pallas edge kernel (DESIGN.md §3.1), and fixed-capacity padding
+so the jitted model sees static shapes.
 """
 from __future__ import annotations
+
+import warnings
 
 import numpy as np
 
@@ -77,12 +80,49 @@ def drop_longest_edges(x: np.ndarray, snd: np.ndarray, rcv: np.ndarray, p: float
     return snd[keep], rcv[keep]
 
 
-def pad_edges(snd: np.ndarray, rcv: np.ndarray, capacity: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Pad/truncate to ``capacity``; returns (senders, receivers, edge_mask)."""
+def sort_edges_by_receiver(
+    snd: np.ndarray, rcv: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """CSR layout pass: stable-sort edges by receiver (DESIGN.md §3.1).
+
+    Receiver-sorted edges make the segment reduction's scatter targets
+    monotone — the layout contract of the fused Pallas edge kernel (each
+    edge block then writes a narrow band of receiver rows) and a better
+    access pattern for XLA's segment_sum.  Within-receiver order is
+    irrelevant downstream (an over-capacity :func:`pad_edges` truncation
+    selects the globally shortest edges itself), so a plain stable sort
+    suffices.
+    """
+    if snd.size == 0:
+        return snd, rcv
+    order = np.argsort(rcv, kind="stable")
+    return snd[order], rcv[order]
+
+
+def pad_edges(
+    snd: np.ndarray, rcv: np.ndarray, capacity: int, x: np.ndarray | None = None
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pad/truncate to ``capacity``; returns (senders, receivers, edge_mask).
+
+    Over capacity, the *longest* edges are dropped (consistent with the
+    Sec. VII-B drop-longest semantics) when ``x`` is given; without
+    coordinates the tail of the (receiver-sorted) edge list is dropped.
+    Either way truncation warns — silent capacity loss reads as "covered
+    every edge" when it didn't.
+    """
     e = snd.size
     if e > capacity:
-        sel = np.random.default_rng(0).choice(e, capacity, replace=False)
-        snd, rcv, e = snd[sel], rcv[sel], capacity
+        warnings.warn(
+            f"pad_edges: truncating {e} edges to capacity {capacity} "
+            f"({'longest-first' if x is not None else 'tail-first'} drop)",
+            stacklevel=2)
+        if x is not None:
+            d2 = np.sum((x[snd] - x[rcv]) ** 2, axis=-1)
+            keep = np.sort(np.argsort(d2, kind="stable")[:capacity])
+            snd, rcv = snd[keep], rcv[keep]
+        else:
+            snd, rcv = snd[:capacity], rcv[:capacity]
+        e = capacity
     out_s = np.zeros(capacity, np.int32)
     out_r = np.zeros(capacity, np.int32)
     mask = np.zeros(capacity, np.float32)

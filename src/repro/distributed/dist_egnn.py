@@ -28,14 +28,33 @@ from repro.training.optim import Adam
 Array = jax.Array
 GRAPH_AXIS = "graph"
 
+# jax 0.4.x ↔ 0.8.x compat: prefer the stable jax.shard_map API, falling
+# back to jax.experimental.shard_map; the replication-check kwarg is keyed
+# on the actual signature (0.5/0.6 expose jax.shard_map but still spell it
+# check_rep; 0.7+ renamed it to check_vma).
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # pragma: no cover - exercised on jax<0.5 only
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+import inspect as _inspect
+
+_SHARD_MAP_KW = (
+    {"check_vma": False}
+    if "check_vma" in _inspect.signature(_shard_map).parameters
+    else {"check_rep": False}
+)
+
 
 def make_gnn_mesh(n_devices: Optional[int] = None) -> Mesh:
     """1-D mesh over the graph-partition axis (data parallel handled by vmap
     inside each shard — every device owns shard d of *all* batch elements)."""
     devs = jax.devices()
     n = n_devices or len(devs)
-    return jax.make_mesh((n,), (GRAPH_AXIS,),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh((n,), (GRAPH_AXIS,),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+    return jax.make_mesh((n,), (GRAPH_AXIS,))
 
 
 class ShardedBatch(NamedTuple):
@@ -111,10 +130,11 @@ def build_dist_apply(cfg: FastEGNNConfig, mesh: Mesh):
         x, vs = jax.vmap(one)(sb)
         return x[None], jax.tree.map(lambda a: a[None], vs)
 
-    # check_vma=False: vmap-over-psum inside shard_map needs the legacy
-    # collective batching rule (jax 0.8 limitation).
-    mapped = jax.shard_map(shard_body, mesh=mesh, in_specs=(P(), specs),
-                           out_specs=(P(GRAPH_AXIS), P(GRAPH_AXIS)), check_vma=False)
+    # replication checking off: vmap-over-psum inside shard_map needs the
+    # legacy collective batching rule (jax 0.8 limitation).
+    mapped = _shard_map(shard_body, mesh=mesh, in_specs=(P(), specs),
+                        out_specs=(P(GRAPH_AXIS), P(GRAPH_AXIS)),
+                        **_SHARD_MAP_KW)
     return jax.jit(mapped)
 
 
@@ -144,8 +164,9 @@ def build_dist_train_step(cfg: FastEGNNConfig, mesh: Mesh, opt: Adam,
         return loss[None]
 
     def loss_fn(params, sb):
-        per_shard = jax.shard_map(shard_loss, mesh=mesh, in_specs=(P(), specs),
-                                  out_specs=P(GRAPH_AXIS), check_vma=False)(params, sb)
+        per_shard = _shard_map(shard_loss, mesh=mesh, in_specs=(P(), specs),
+                               out_specs=P(GRAPH_AXIS),
+                               **_SHARD_MAP_KW)(params, sb)
         return jnp.mean(per_shard)  # identical on every shard already
 
     @jax.jit

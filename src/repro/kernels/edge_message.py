@@ -1,0 +1,172 @@
+"""Fused real-real edge-pathway Pallas TPU kernel (DESIGN.md §3).
+
+The dominant cost of every model in the zoo is the real-real edge pathway
+(Eq. 3 + the real parts of Eqs. 6-7).  The pure-jnp path materialises the
+``(E, hidden)`` message tensor in HBM, reads it back for the gate MLP,
+writes the gated edge vectors, and reads them again for the segment
+reduction — four HBM round-trips of O(E·hidden) each.  Following the
+E2Former-V2 idiom (linear activation memory via on-the-fly recomputation),
+this kernel streams receiver-sorted (CSR) edge blocks through VMEM and
+performs messages + gates + masked segment reduction in one pass:
+
+  * grid over blocks of BE edges (the data layer's
+    ``sort_edges_by_receiver`` guarantees real edges are receiver-sorted
+    with the padding tail last, so each block's scatter targets a narrow,
+    monotone band of receiver rows — locality the sequential grid exploits);
+  * node coordinates ``x`` and features ``h`` stay VMEM-resident for the
+    whole grid (index_map → block 0), so endpoint gathers are VMEM reads;
+  * gather and scatter are expressed as one-hot matmuls against the
+    resident arrays — the MXU-native formulation of segment_sum (TPU has
+    no hardware scatter); receiver sorting makes the scatter one-hot
+    block-banded.  The (block_e, N) one-hots bound eligibility to
+    ``message_passing.EDGE_KERNEL_MAX_NODES`` nodes; exploiting the bands
+    to tile larger graphs is the planned follow-up (ROADMAP);
+  * the ``(BE, hidden)`` messages, gates and edge vectors live only in
+    VMEM registers: nothing of size O(E·hidden) ever touches HBM;
+  * outputs (dx, mh, deg) are accumulated across grid steps in resident
+    output blocks (TPU sequential-grid guarantee) and degree-normalised
+    once by the final step.
+
+Static flags select the model variant (DESIGN.md §3.2): ``gate_mode`` in
+{'mlp', 'identity', 'none'} and ``rel_mode`` in {'raw', 'inv1p'} cover
+EGNN/FastEGNN, SchNet's Eq. 13 coordinate head, RF's normalised radial
+field and MPNN's invariant aggregation with one kernel.
+
+Backward pass: ``ops.edge_pathway`` wraps this in ``jax.custom_vjp`` and
+rematerialises through the pure-jnp oracle ``ref.edge_pathway_ref``
+(flash-style recompute) so the fused forward is trainable.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _edge_kernel(
+    snd_ref, rcv_ref, em_ref, x_ref, h_ref,
+    w1r_ref, w1s_ref, w1d_ref, b1_ref, w2_ref, b2_ref,
+    wg1_ref, bg1_ref, wg2_ref,
+    dx_ref, mh_ref, deg_ref,
+    *, gate_mode: str, rel_mode: str, clamp: float,
+):
+    i = pl.program_id(0)
+    n = x_ref.shape[0]
+
+    @pl.when(i == 0)
+    def _init():
+        dx_ref[...] = jnp.zeros_like(dx_ref)
+        mh_ref[...] = jnp.zeros_like(mh_ref)
+        deg_ref[...] = jnp.zeros_like(deg_ref)
+
+    snd = snd_ref[...]  # (BE, 1) int32
+    rcv = rcv_ref[...]  # (BE, 1) int32
+    em = em_ref[...]  # (BE, 1)
+    be = snd.shape[0]
+    # One-hot gather/scatter operands (MXU-native segment ops).  With
+    # receiver-sorted edges oh_r is block-banded: each grid step's scatter
+    # hits a contiguous window of receiver rows.
+    ids = jax.lax.broadcasted_iota(jnp.int32, (be, n), 1)
+    oh_s = (snd == ids).astype(x_ref.dtype)  # (BE, N)
+    oh_r = (rcv == ids).astype(x_ref.dtype)
+
+    x = x_ref[...]
+    xs = oh_s @ x  # (BE, 3) endpoint gathers
+    xr = oh_r @ x
+    rel = xr - xs
+    d2 = jnp.sum(rel * rel, axis=-1, keepdims=True)  # (BE, 1)
+
+    h = h_ref[...]
+    # φ1 layer 1 over [h_r | h_s | d²] with the weight matrix pre-split by
+    # input slice; zero-width/zero-weight slices fall out as no-ops.
+    t1 = jax.nn.silu(
+        oh_r @ h @ w1r_ref[...]
+        + oh_s @ h @ w1s_ref[...]
+        + d2 @ w1d_ref[...]
+        + b1_ref[...]
+    )
+    msg = t1 @ w2_ref[...] + b2_ref[...]  # (BE, M) — never written to HBM
+
+    mh_ref[...] += oh_r.T @ (msg * em)
+    deg_ref[...] += oh_r.T @ em
+
+    if gate_mode != "none":
+        if gate_mode == "mlp":
+            gate = jax.nn.silu(msg @ wg1_ref[...] + bg1_ref[...]) @ wg2_ref[...]
+        else:  # 'identity': the (width-1) message is the gate
+            gate = msg
+        gate = jnp.clip(gate, -clamp, clamp)
+        if rel_mode == "inv1p":
+            rel = rel / (jnp.sqrt(d2 + 1e-12) + 1.0)
+        dx_ref[...] += oh_r.T @ (rel * gate * em)
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _normalize():
+        inv = 1.0 / jnp.maximum(deg_ref[...], 1.0)  # (N, 1)
+        mh_ref[...] = mh_ref[...] * inv
+        if gate_mode != "none":
+            dx_ref[...] = dx_ref[...] * inv
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("gate_mode", "rel_mode", "clamp", "block_e", "interpret"),
+)
+def edge_pathway_fused(
+    x: Array, h: Array, snd: Array, rcv: Array, em: Array,
+    w1r: Array, w1s: Array, w1d: Array, b1: Array,
+    w2: Array, b2: Array,
+    wg1: Array, bg1: Array, wg2: Array,
+    *, gate_mode: str = "mlp", rel_mode: str = "raw",
+    clamp: float = math.inf, block_e: int = 128, interpret: bool = True,
+):
+    """See ``repro.kernels.ref.edge_pathway_ref`` for the exact contract.
+
+    Shapes: x (N,3), h (N,Dh≥1), snd/rcv (E,) int32 receiver-sorted,
+    em (E,); weights as 2-D matrices (row vectors for biases).  Returns
+    (dx (N,3), mh (N,M), deg (N,1)) with masked-mean normalisation.
+    """
+    n = x.shape[0]
+    m = w2.shape[1]
+    e = snd.shape[0]
+    if e == 0:  # empty graph: nothing to reduce (edge-drop p=1.0 story)
+        return (jnp.zeros((n, 3), x.dtype), jnp.zeros((n, m), x.dtype),
+                jnp.zeros((n, 1), x.dtype))
+    e_pad = -(-e // block_e) * block_e
+    if e_pad != e:
+        pad = e_pad - e
+        snd = jnp.pad(snd, (0, pad))  # padded edges masked out via em=0
+        rcv = jnp.pad(rcv, (0, pad))
+        em = jnp.pad(em, (0, pad))
+    snd2 = snd.astype(jnp.int32)[:, None]
+    rcv2 = rcv.astype(jnp.int32)[:, None]
+    em2 = em[:, None].astype(x.dtype)
+
+    full = lambda a: pl.BlockSpec(a.shape, lambda i: (0,) * a.ndim)
+    eblk = lambda width: pl.BlockSpec((block_e, width), lambda i: (i, 0))
+    out_full = lambda *shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+
+    kernel = functools.partial(_edge_kernel, gate_mode=gate_mode,
+                               rel_mode=rel_mode, clamp=clamp)
+    dx, mh, deg = pl.pallas_call(
+        kernel,
+        grid=(e_pad // block_e,),
+        in_specs=[
+            eblk(1), eblk(1), eblk(1), full(x), full(h),
+            full(w1r), full(w1s), full(w1d), full(b1), full(w2), full(b2),
+            full(wg1), full(bg1), full(wg2),
+        ],
+        out_specs=(out_full(n, 3), out_full(n, m), out_full(n, 1)),
+        out_shape=(
+            jax.ShapeDtypeStruct((n, 3), x.dtype),
+            jax.ShapeDtypeStruct((n, m), x.dtype),
+            jax.ShapeDtypeStruct((n, 1), x.dtype),
+        ),
+        interpret=interpret,
+    )(snd2, rcv2, em2, x, h, w1r, w1s, w1d, b1, w2, b2, wg1, bg1, wg2)
+    return dx, mh, deg

@@ -8,10 +8,15 @@
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.dtypes import float0
 
 from repro.kernels import ref
+from repro.kernels.edge_message import edge_pathway_fused
 from repro.kernels.mmd_rbf import mmd_cross_sum
 from repro.kernels.virtual_message import virtual_pathway_fused
 
@@ -20,6 +25,87 @@ Array = jax.Array
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# ------------------------------------------------------------------- edge MP
+@functools.lru_cache(maxsize=None)
+def _edge_custom(gate_mode: str, rel_mode: str, clamp: float):
+    """Per-variant custom_vjp wrapper (cached so jit caches stay warm).
+
+    Forward: fused Pallas kernel.  Backward: rematerialise through the
+    pure-jnp oracle (flash-style recompute — no (E, hidden) residuals).
+    Integer edge indices get float0 cotangents.
+    """
+
+    @jax.custom_vjp
+    def f(x, h, snd, rcv, em, *ws):
+        return edge_pathway_fused(x, h, snd, rcv, em, *ws,
+                                  gate_mode=gate_mode, rel_mode=rel_mode,
+                                  clamp=clamp, interpret=_interpret())
+
+    def fwd(*args):
+        return f(*args), args
+
+    def bwd(res, cots):
+        x, h, snd, rcv, em, *ws = res
+        _, vjp = jax.vjp(
+            lambda x, h, em, *ws: ref.edge_pathway_ref(
+                x, h, snd, rcv, em, *ws,
+                gate_mode=gate_mode, rel_mode=rel_mode, clamp=clamp),
+            x, h, em, *ws)
+        gx, gh, gem, *gws = vjp(cots)
+        zint = lambda a: np.zeros(a.shape, dtype=float0)
+        return (gx, gh, zint(snd), zint(rcv), gem, *gws)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def unpack_edge_params(lp, h: Array, spec) -> tuple[Array, tuple[Array, ...]]:
+    """Model param pytree → the kernel's flat weight layout.
+
+    φ1 layer-1 weight rows are ordered [h_r | h_s | d² | e_ij] (the
+    concatenation order in ``core.message_passing._phi1_features``); the
+    matrix is pre-split per input slice so optional inputs become
+    zero-width or zero-weight slices.  Returns (h_for_kernel, weights).
+    """
+    n = h.shape[0]
+    phi1 = lp["phi1"]
+    w1, b1 = phi1[0]["w"], phi1[0]["b"]
+    h1 = w1.shape[1]
+    dh = h.shape[-1] if spec.use_h else 0
+    if dh > 0:
+        hk = h
+        w1r, w1s = w1[:dh], w1[dh : 2 * dh]
+    else:  # geometry-only models (RF): a zero feature column keeps shapes ≥1
+        hk = jnp.zeros((n, 1), w1.dtype)
+        w1r = w1s = jnp.zeros((1, h1), w1.dtype)
+    off = 2 * dh
+    if spec.use_d2:
+        w1d = w1[off : off + 1]
+    else:
+        w1d = jnp.zeros((1, h1), w1.dtype)
+    w2 = phi1[1]["w"]
+    m = w2.shape[1]
+    b2 = phi1[1]["b"][None, :] if "b" in phi1[1] else jnp.zeros((1, m), w2.dtype)
+    if spec.gate == "mlp":
+        gp = lp["gate"]
+        wg1, bg1, wg2 = gp[0]["w"], gp[0]["b"][None, :], gp[1]["w"]
+    else:  # unused by the 'identity'/'none' static branches
+        wg1 = bg1 = wg2 = jnp.zeros((1, 1), w2.dtype)
+    return hk, (w1r, w1s, w1d, b1[None, :], w2, b2, wg1, bg1, wg2)
+
+
+def edge_pathway(lp, h: Array, x: Array, g, spec) -> tuple[Array, Array]:
+    """Kernel-backed replacement for the jnp edge pathway.
+
+    Returns (dx (N,3), mh (N,M)); eligibility is checked by the caller
+    (``core.message_passing.kernel_supported``).
+    """
+    hk, ws = unpack_edge_params(lp, h, spec)
+    f = _edge_custom(spec.gate, spec.rel, float(spec.coord_clamp))
+    dx, mh, _deg = f(x, hk, g.senders, g.receivers, g.edge_mask, *ws)
+    return dx, mh
 
 
 # ---------------------------------------------------------------- virtual MP

@@ -54,6 +54,53 @@ def virtual_pathway_ref(
     return dx, mh, dz_sum, ms_sum
 
 
+def edge_pathway_ref(
+    x: Array,  # (N, 3)
+    h: Array,  # (N, Dh)      Dh ≥ 1 (zero-feature models pass a zero column)
+    snd: Array,  # (E,) int32
+    rcv: Array,  # (E,) int32
+    em: Array,  # (E,)        edge validity mask
+    w1r: Array,  # (Dh, H1)   φ1 layer-1 weight rows for h_receiver
+    w1s: Array,  # (Dh, H1)   φ1 layer-1 weight rows for h_sender
+    w1d: Array,  # (1, H1)    φ1 layer-1 weight row for d²
+    b1: Array,  # (1, H1)
+    w2: Array,  # (H1, M)     φ1 layer-2
+    b2: Array,  # (1, M)
+    wg1: Array,  # (M, HG)    gate layer-1 (gate_mode='mlp' only)
+    bg1: Array,  # (1, HG)
+    wg2: Array,  # (HG, 1)    gate layer-2 (no bias)
+    *,
+    gate_mode: str = "mlp",  # 'mlp' | 'identity' | 'none'
+    rel_mode: str = "raw",  # 'raw' | 'inv1p'
+    clamp: float = float("inf"),
+):
+    """Fused real-real edge pathway (Eq. 3 + real parts of Eqs. 6-7).
+
+    Returns (dx (N,3), mh (N,M), deg (N,1)) — masked-mean aggregation onto
+    receivers.  ``dx`` is zeros when gate_mode='none'.
+    """
+    n = x.shape[0]
+    rel = x[rcv] - x[snd]  # (E, 3)
+    d2 = jnp.sum(rel * rel, axis=-1, keepdims=True)  # (E, 1)
+    t1 = jax.nn.silu(h[rcv] @ w1r + h[snd] @ w1s + d2 @ w1d + b1)
+    msg = t1 @ w2 + b2  # (E, M)
+    em2 = em[:, None]
+    deg = jax.ops.segment_sum(em, rcv, num_segments=n)
+    inv = (1.0 / jnp.maximum(deg, 1.0))[:, None]
+    mh = jax.ops.segment_sum(msg * em2, rcv, num_segments=n) * inv
+    if gate_mode == "none":
+        return jnp.zeros((n, 3), x.dtype), mh, deg[:, None]
+    if gate_mode == "mlp":
+        gate = jax.nn.silu(msg @ wg1 + bg1) @ wg2
+    else:
+        gate = msg
+    gate = jnp.clip(gate, -clamp, clamp)
+    if rel_mode == "inv1p":
+        rel = rel / (jnp.sqrt(d2 + 1e-12) + 1.0)
+    dx = jax.ops.segment_sum(rel * gate * em2, rcv, num_segments=n) * inv
+    return dx, mh, deg[:, None]
+
+
 def mmd_cross_ref(x: Array, z: Array, node_mask: Array, sigma: float) -> Array:
     """Σ_i mask_i Σ_c exp(−‖x_i−z_c‖²/2σ²) — the MMD cross term numerator."""
     d2 = jnp.sum((x[:, None, :] - z[None, :, :]) ** 2, axis=-1)

@@ -7,13 +7,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.graph import GeometricGraph
+from repro.core.message_passing import EdgeSpec, edge_pathway
 from repro.core.mlp import init_mlp, mlp
 
 Array = jax.Array
 
+# MPNN: invariant-only pathway — messages from endpoint features alone, no
+# geometry, no coordinate gate, masked-mean aggregation.
+MPNN_EDGE_SPEC = EdgeSpec(use_h=True, use_d2=False, gate="none")
+
 
 class LinearConfig(NamedTuple):
-    pass
+    use_kernel: bool = False  # no edge pathway: accepted for registry uniformity
 
 
 def init_linear_dyn(key, cfg: LinearConfig):
@@ -29,6 +34,7 @@ class MPNNConfig(NamedTuple):
     n_layers: int = 4
     hidden: int = 64
     h_in: int = 1
+    use_kernel: bool = False  # dispatch the edge pathway to the Pallas kernel
 
 
 def init_mpnn(key, cfg: MPNNConfig):
@@ -48,12 +54,9 @@ def init_mpnn(key, cfg: MPNNConfig):
 
 
 def mpnn_apply(params, cfg: MPNNConfig, g: GeometricGraph) -> Array:
-    n = g.x.shape[0]
     z = mlp(params["embed"], jnp.concatenate([g.h, g.x, g.v], axis=-1))
     for lp in params["layers"]:
-        m = mlp(lp["msg"], jnp.concatenate([z[g.receivers], z[g.senders]], axis=-1))
-        m = m * g.edge_mask[:, None]
-        deg = jnp.maximum(jax.ops.segment_sum(g.edge_mask, g.receivers, num_segments=n), 1.0)
-        agg = jax.ops.segment_sum(m, g.receivers, num_segments=n) / deg[:, None]
+        _, agg = edge_pathway({"phi1": lp["msg"]}, z, g.x, g, MPNN_EDGE_SPEC,
+                              use_kernel=cfg.use_kernel)
         z = z + mlp(lp["upd"], jnp.concatenate([z, agg], axis=-1))
     return g.x + mlp(params["dec"], z)

@@ -1,7 +1,9 @@
 """EGNN baseline (Satorras et al., 2021) — Eqs. 3, 6, 7 without virtual terms.
 
-Functional, mask-aware, static shapes.  Also exports the edge-message and
-real-aggregation helpers reused by FastEGNN and the plug-in variants.
+Functional, mask-aware, static shapes.  The real-real edge pathway (gather →
+φ1 → coordinate gate → masked mean) lives in ``core.message_passing``; this
+module only owns the EGNN-specific layer wiring and exports the shared
+:data:`EDGE_SPEC` reused by FastEGNN.
 """
 from __future__ import annotations
 
@@ -11,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.graph import GeometricGraph
+from repro.core.message_passing import EdgeSpec, edge_pathway
 from repro.core.mlp import init_mlp, mlp
 
 Array = jax.Array
@@ -24,6 +27,14 @@ class EGNNConfig(NamedTuple):
     velocity: bool = True
     # clamp on coordinate updates for numerical stability on large graphs
     coord_clamp: float = 100.0
+    use_kernel: bool = False  # dispatch the edge pathway to the Pallas kernel
+
+
+def edge_spec(coord_clamp: float) -> EdgeSpec:
+    """Eq. 3 + Eqs. 6-7 real-real terms: full φ1 over [h_i|h_j|d²|e_ij],
+    MLP coordinate gate, masked-mean aggregation."""
+    return EdgeSpec(use_h=True, use_d2=True, use_edge_attr=True, gate="mlp",
+                    rel="raw", coord_clamp=coord_clamp, normalize=True)
 
 
 def init_egnn_layer(key, cfg: EGNNConfig):
@@ -48,30 +59,11 @@ def init_egnn(key, cfg: EGNNConfig):
     }
 
 
-def edge_messages(lp, h: Array, x: Array, g: GeometricGraph) -> Array:
-    """Eq. 3: m_ij = φ1(h_i, h_j, ‖x_i−x_j‖², e_ij); (E, hidden)."""
-    hi = h[g.receivers]
-    hj = h[g.senders]
-    d2 = jnp.sum((x[g.receivers] - x[g.senders]) ** 2, axis=-1, keepdims=True)
-    feats = [hi, hj, d2]
-    if g.edge_attr.shape[-1] > 0:
-        feats.append(g.edge_attr)
-    return mlp(lp["phi1"], jnp.concatenate(feats, axis=-1))
-
-
-def real_real_aggregate(lp, h: Array, x: Array, g: GeometricGraph, msgs: Array,
-                        coord_clamp: float) -> tuple[Array, Array]:
-    """Real-real parts of Eqs. 6–7 with α_i = 1/|N(i)| (masked mean)."""
-    n = x.shape[0]
-    em = g.edge_mask[:, None]
-    rel = x[g.receivers] - x[g.senders]  # (E, 3)
-    gate = mlp(lp["phi_xr"], msgs)  # (E, 1)
-    dx_e = rel * jnp.clip(gate, -coord_clamp, coord_clamp) * em
-    deg = jax.ops.segment_sum(g.edge_mask, g.receivers, num_segments=n)
-    inv_deg = 1.0 / jnp.maximum(deg, 1.0)
-    dx = jax.ops.segment_sum(dx_e, g.receivers, num_segments=n) * inv_deg[:, None]
-    mh = jax.ops.segment_sum(msgs * em, g.receivers, num_segments=n) * inv_deg[:, None]
-    return dx, mh
+def real_real_pathway(lp, h: Array, x: Array, g: GeometricGraph,
+                      coord_clamp: float, use_kernel: bool = False):
+    """Eq. 3 messages + real-real parts of Eqs. 6-7 with α_i = 1/|N(i)|."""
+    return edge_pathway({"phi1": lp["phi1"], "gate": lp["phi_xr"]}, h, x, g,
+                        edge_spec(coord_clamp), use_kernel=use_kernel)
 
 
 def egnn_apply(params, cfg: EGNNConfig, g: GeometricGraph) -> tuple[Array, Array]:
@@ -79,8 +71,7 @@ def egnn_apply(params, cfg: EGNNConfig, g: GeometricGraph) -> tuple[Array, Array
     h = mlp(params["embed"], g.h)
     x = g.x
     for lp in params["layers"]:
-        m = edge_messages(lp, h, x, g)
-        dx, mh = real_real_aggregate(lp, h, x, g, m, cfg.coord_clamp)
+        dx, mh = real_real_pathway(lp, h, x, g, cfg.coord_clamp, cfg.use_kernel)
         if cfg.velocity:
             dx = dx + mlp(lp["phi_v"], h) * g.v  # φ_v(h_i)·v_i^(0)
         x = x + dx * g.node_mask[:, None]

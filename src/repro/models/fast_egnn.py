@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.graph import GeometricGraph
+from repro.core.message_passing import clamp_vector_norm
 from repro.core.mlp import init_mlp, mlp
 from repro.core.virtual_nodes import (
     VirtualState,
@@ -25,7 +26,7 @@ from repro.core.virtual_nodes import (
     virtual_messages,
     virtual_node_sums,
 )
-from repro.models.egnn import EGNNConfig, edge_messages, real_real_aggregate
+from repro.models.egnn import EGNNConfig, real_real_pathway
 
 Array = jax.Array
 
@@ -39,7 +40,8 @@ class FastEGNNConfig(NamedTuple):
     s_dim: int = 64
     velocity: bool = True
     coord_clamp: float = 100.0
-    use_kernel: bool = False  # dispatch virtual pathway to the Pallas kernel
+    # dispatch virtual AND real-real edge pathways to the Pallas kernels
+    use_kernel: bool = False
     # Table II ablation: share one weight set across channels (unordered
     # "Global Nodes" variant — strictly weaker, kept for the benchmark)
     shared_virtual: bool = False
@@ -120,13 +122,15 @@ def fast_egnn_apply(
     for lp in params["layers"]:
         com = masked_com(x, g.node_mask, axis_name)  # Alg. 1 line 4
         mv = virtual_global_message(vs.z, com)  # Eq. 4
-        m_edges = edge_messages(lp, h, x, g)  # Eq. 3
         dx_v, mh_v, dz_sum, ms_sum = _virtual_pathway(
             lp["virtual"], h, x, vs, mv, g.node_mask, cfg)  # Eq. 5
-        dx_r, mh_r = real_real_aggregate(lp, h, x, g, m_edges, cfg.coord_clamp)
+        dx_r, mh_r = real_real_pathway(lp, h, x, g, cfg.coord_clamp,
+                                       cfg.use_kernel)  # Eqs. 3, 6-7
         # clamp the virtual term like the real-real term (official EGNN
-        # practice): an unbounded gate feeds the |x|→|d²| runaway loop
-        dx_v = jnp.clip(dx_v, -cfg.coord_clamp, cfg.coord_clamp)
+        # practice): an unbounded gate feeds the |x|→|d²| runaway loop.
+        # Norm rescale, not componentwise clip — the clip box is
+        # axis-aligned and would break Prop. IV.1 when it binds.
+        dx_v = clamp_vector_norm(dx_v, cfg.coord_clamp)
         dx = dx_r + dx_v
         if cfg.velocity:
             dx = dx + mlp(lp["phi_v"], h) * g.v

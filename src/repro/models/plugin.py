@@ -4,6 +4,12 @@
 RF / SchNet / TFN: per-channel real↔virtual messages, the real-coordinate
 correction term ``(1/C)Σ_c (x_i−z_c)φ_x^v(m_ic)``, and the virtual-node
 aggregation — all without touching the host model's native update rule.
+
+With ``use_kernel=True`` the pathway dispatches to the fused Pallas kernel
+(``kernels.ops.virtual_pathway``) whenever the parameter layout supports it
+(per-channel stacked MLPs with a real feature input — see
+:func:`kernel_supported`), so every ``fast_*`` plug-in variant shares the
+kernelised hot path with FastEGNN.
 """
 from __future__ import annotations
 
@@ -12,14 +18,16 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.message_passing import clamp_vector_norm
 from repro.core.virtual_nodes import (
     VirtualState,
     init_virtual_block,
     masked_com,
     real_from_virtual,
-    virtual_aggregate,
+    virtual_aggregate_from_sums,
     virtual_global_message,
     virtual_messages,
+    virtual_node_sums,
 )
 
 Array = jax.Array
@@ -27,6 +35,13 @@ Array = jax.Array
 
 def init_plugin(key, n_virtual: int, h_dim: int, s_dim: int, hidden: int):
     return init_virtual_block(key, n_virtual, h_dim, s_dim, hidden)
+
+
+def kernel_supported(vb, h: Array) -> bool:
+    """Virtual-kernel dispatch rule (DESIGN.md §3.2): per-channel stacked
+    parameters (the ordered-set form; the shared 'Global Nodes' ablation is
+    rank-2) and at least one real feature column."""
+    return vb["phi2"][0]["w"].ndim == 3 and h.shape[-1] > 0
 
 
 def virtual_plugin_step(
@@ -37,6 +52,7 @@ def virtual_plugin_step(
     node_mask: Array,
     axis_name: Optional[str] = None,
     coord_clamp: float = 10.0,
+    use_kernel: bool = False,
 ) -> tuple[Array, Array, VirtualState]:
     """One layer of the auxiliary virtual pathway.
 
@@ -44,11 +60,21 @@ def virtual_plugin_step(
     ``coord_clamp`` bounds the coordinate correction per layer — host models
     without their own update normalisation (SchNet's Eq. 13 bolt-on) are
     otherwise one bad gate away from a runaway |x| → |d²| feedback loop.
+    The bound is a norm rescale, not a componentwise clip, so the pathway
+    stays E(3)-equivariant even when it binds.
     """
     com = masked_com(x, node_mask, axis_name)
     mv = virtual_global_message(vs.z, com)
-    msgs = virtual_messages(vb, h, x, vs, mv)
-    dx_v, mh_v = real_from_virtual(vb, x, vs, msgs)
-    dx_v = jnp.clip(dx_v, -coord_clamp, coord_clamp)
-    vs_new = virtual_aggregate(vb, x, vs, msgs, node_mask, axis_name)
+    if use_kernel and kernel_supported(vb, h):
+        from repro.kernels import ops as kops
+
+        dx_v, mh_v, dz_sum, ms_sum = kops.virtual_pathway(
+            vb, h, x, vs, mv, node_mask)
+    else:
+        msgs = virtual_messages(vb, h, x, vs, mv)
+        dx_v, mh_v = real_from_virtual(vb, x, vs, msgs)
+        dz_sum, ms_sum = virtual_node_sums(vb, x, vs, msgs, node_mask)
+    dx_v = clamp_vector_norm(dx_v, coord_clamp)
+    vs_new = virtual_aggregate_from_sums(vb, vs, dz_sum, ms_sum,
+                                         jnp.sum(node_mask), axis_name)
     return dx_v, mh_v, vs_new

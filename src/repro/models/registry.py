@@ -1,4 +1,22 @@
-"""Uniform model registry: name → (make_config, init, apply→predicted coords).
+"""Uniform model registry: explicit spec composition, no name magic.
+
+Every entry is a :class:`ModelSpec` — either a *base* model or a base model
+composed with the virtual-node plug-in via :func:`compose_virtual` (the
+Sec. V "Fast" variants).  What used to be inferred from name prefixes
+(``fast_*`` ⇒ virtual defaults, ``_FORCE_VIRTUAL0`` ⇒ disable the plug-in)
+is now carried by the spec itself:
+
+  * ``cfg_forced``   — config fields the spec pins regardless of caller
+    overrides (plain RF/SchNet/TFN pin ``n_virtual=0`` so the registry name
+    fully determines the model family);
+  * ``cfg_defaults`` — overridable defaults (``fast_*`` compositions default
+    ``n_virtual=3``, the paper's C).
+
+Because every config carries ``use_kernel`` and every apply routes its edge
+aggregation through ``core.message_passing`` (and the virtual pathway
+through ``models.plugin``), *every* registry entry — base or composed —
+gets the fused Pallas pathways with ``make_model(name, key,
+use_kernel=True)``; no per-model wiring.
 
 Every apply returns the predicted coordinates (N,3); feature outputs and
 virtual states are exposed through ``apply_full`` where the model has them
@@ -6,7 +24,7 @@ virtual states are exposed through ``apply_full`` where the model has them
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, Callable, NamedTuple
 
 import jax
 
@@ -22,6 +40,23 @@ class ModelSpec(NamedTuple):
     # apply_full(params, cfg, graph, axis_name) -> (x_pred, aux dict)
     apply_full: Callable[..., tuple]
     has_virtual: bool
+    cfg_forced: dict = {}  # pinned config fields (override the caller)
+    cfg_defaults: dict = {}  # overridable config defaults
+
+
+def compose_virtual(base: ModelSpec, n_virtual: int = 3) -> ModelSpec:
+    """Base model × virtual-node plug-in (Sec. V).
+
+    Unpins ``n_virtual`` and defaults it to the paper's C=3; everything
+    else — init, apply, kernel dispatch — is inherited from the base spec,
+    whose apply activates the plug-in pathway when ``n_virtual > 0``.
+    """
+    forced = {k: v for k, v in base.cfg_forced.items() if k != "n_virtual"}
+    return base._replace(
+        has_virtual=True,
+        cfg_forced=forced,
+        cfg_defaults={**base.cfg_defaults, "n_virtual": n_virtual},
+    )
 
 
 def _egnn_full(p, cfg, g, axis_name=None):
@@ -56,31 +91,36 @@ def _mpnn_full(p, cfg, g, axis_name=None):
     return baselines.mpnn_apply(p, cfg, g), {}
 
 
-REGISTRY: dict[str, ModelSpec] = {
-    "linear": ModelSpec(baselines.LinearConfig, baselines.init_linear_dyn, _linear_full, False),
-    "mpnn": ModelSpec(baselines.MPNNConfig, baselines.init_mpnn, _mpnn_full, False),
+_BASE: dict[str, ModelSpec] = {
+    "linear": ModelSpec(baselines.LinearConfig, baselines.init_linear_dyn,
+                        _linear_full, False),
+    "mpnn": ModelSpec(baselines.MPNNConfig, baselines.init_mpnn,
+                      _mpnn_full, False),
     "egnn": ModelSpec(egnn.EGNNConfig, egnn.init_egnn, _egnn_full, False),
-    "fast_egnn": ModelSpec(fast_egnn.FastEGNNConfig, fast_egnn.init_fast_egnn, _fast_egnn_full, True),
-    "rf": ModelSpec(rf.RFConfig, rf.init_rf, _rf_full, False),
-    "fast_rf": ModelSpec(rf.RFConfig, rf.init_rf, _rf_full, True),
-    "schnet": ModelSpec(schnet.SchNetConfig, schnet.init_schnet, _schnet_full, False),
-    "fast_schnet": ModelSpec(schnet.SchNetConfig, schnet.init_schnet, _schnet_full, True),
-    "tfn": ModelSpec(tfn.TFNConfig, tfn.init_tfn, _tfn_full, False),
-    "fast_tfn": ModelSpec(tfn.TFNConfig, tfn.init_tfn, _tfn_full, True),
+    "rf": ModelSpec(rf.RFConfig, rf.init_rf, _rf_full, False,
+                    cfg_forced={"n_virtual": 0}),
+    "schnet": ModelSpec(schnet.SchNetConfig, schnet.init_schnet,
+                        _schnet_full, False, cfg_forced={"n_virtual": 0}),
+    "tfn": ModelSpec(tfn.TFNConfig, tfn.init_tfn, _tfn_full, False,
+                     cfg_forced={"n_virtual": 0}),
 }
 
-# "fast_*" plug-in variants need n_virtual > 0 in their config; plain variants
-# force it to 0 so the registry name fully determines the model family.
-_FORCE_VIRTUAL0 = {"rf", "schnet", "tfn"}
+REGISTRY: dict[str, ModelSpec] = dict(_BASE)
+# FastEGNN has its own apply (ordered virtual nodes are structural, Sec. IV)
+REGISTRY["fast_egnn"] = ModelSpec(fast_egnn.FastEGNNConfig,
+                                  fast_egnn.init_fast_egnn,
+                                  _fast_egnn_full, True)
+# Sec. V plug-in variants: explicit base × virtual composition
+for _name in ("rf", "schnet", "tfn"):
+    REGISTRY[f"fast_{_name}"] = compose_virtual(_BASE[_name])
 
 
 def make_model(name: str, key, **cfg_overrides):
     """Returns (cfg, params, apply_full)."""
     spec = REGISTRY[name]
-    if name in _FORCE_VIRTUAL0:
-        cfg_overrides["n_virtual"] = 0
-    elif name.startswith("fast_") and name != "fast_egnn":
-        cfg_overrides.setdefault("n_virtual", 3)
+    for k, v in spec.cfg_defaults.items():
+        cfg_overrides.setdefault(k, v)
+    cfg_overrides.update(spec.cfg_forced)
     cfg = spec.make_config(**cfg_overrides)
     params = spec.init(key, cfg)
     return cfg, params, spec.apply_full

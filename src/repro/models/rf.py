@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.graph import GeometricGraph
-from repro.core.mlp import init_mlp, mlp
+from repro.core.message_passing import EdgeSpec, edge_pathway
+from repro.core.mlp import init_mlp
 from repro.core.virtual_nodes import VirtualState, init_virtual_coords
 from repro.models.plugin import init_plugin, virtual_plugin_step
 
@@ -25,6 +26,17 @@ class RFConfig(NamedTuple):
     n_virtual: int = 0  # 0 → plain RF
     velocity: bool = True
     coord_clamp: float = 100.0
+    use_kernel: bool = False  # dispatch edge + virtual pathways to Pallas
+
+
+def edge_spec(coord_clamp: float) -> EdgeSpec:
+    """Köhler-style normalised radial field: geometry-only φ (no node
+    features), the width-1 message *is* the gate, and the pair direction is
+    scaled by 1/(‖r‖+1) so far-apart pairs can't produce
+    distance-proportional updates (raw rel·gate diverges on dense far-field
+    graphs)."""
+    return EdgeSpec(use_h=False, use_d2=True, gate="identity", rel="inv1p",
+                    coord_clamp=coord_clamp, normalize=True)
 
 
 def init_rf(key, cfg: RFConfig):
@@ -49,22 +61,14 @@ def rf_apply(params, cfg: RFConfig, g: GeometricGraph,
         vs = VirtualState(z=z0, s=jnp.zeros((cfg.n_virtual, 0), x.dtype))
     h_empty = jnp.zeros((n, 0), x.dtype)
 
+    spec = edge_spec(cfg.coord_clamp)
     for lp in params["layers"]:
-        rel = x[g.receivers] - x[g.senders]
-        d2 = jnp.sum(rel**2, axis=-1, keepdims=True)
-        gate = jnp.clip(mlp(lp["phi"], d2), -cfg.coord_clamp, cfg.coord_clamp)
-        # Köhler-style normalised radial field: scale the pair direction by
-        # 1/(‖r‖+1) so far-apart pairs can't produce distance-proportional
-        # updates (raw rel·gate diverges on dense far-field graphs).
-        # eps inside the sqrt: padded zero-edges otherwise give d(sqrt)/d(d²)
-        # = ∞ and the masked-out gradient becomes 0·∞ = NaN.
-        dx_e = rel / (jnp.sqrt(d2 + 1e-12) + 1.0) * gate * g.edge_mask[:, None]
-        deg = jax.ops.segment_sum(g.edge_mask, g.receivers, num_segments=n)
-        dx = jax.ops.segment_sum(dx_e, g.receivers, num_segments=n)
-        dx = dx / jnp.maximum(deg, 1.0)[:, None]
+        dx, _ = edge_pathway({"phi1": lp["phi"]}, h_empty, x, g, spec,
+                             use_kernel=cfg.use_kernel)
         if cfg.n_virtual > 0:
             dx_v, _, vs = virtual_plugin_step(lp["virtual"], h_empty, x, vs,
-                                              g.node_mask, axis_name)
+                                              g.node_mask, axis_name,
+                                              use_kernel=cfg.use_kernel)
             dx = dx + dx_v
         if cfg.velocity:
             dx = dx + g.v  # RF integrates the initial velocity directly

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.graph import GeometricGraph
+from repro.core.message_passing import (EdgeSpec, aggregate_edges,
+                                        edge_pathway, edge_rel_d2)
 from repro.core.mlp import init_linear, init_mlp, linear, mlp
 from repro.core.virtual_nodes import VirtualState, init_virtual_coords
 from repro.models.plugin import init_plugin, virtual_plugin_step
@@ -30,6 +32,14 @@ class SchNetConfig(NamedTuple):
     s_dim: int = 64
     velocity: bool = True
     coord_clamp: float = 100.0
+    use_kernel: bool = False  # dispatch coord head + virtual path to Pallas
+
+
+def edge_spec(coord_clamp: float) -> EdgeSpec:
+    """Eq. 13 coordinate head: φ(h_i, h_j, d²) emits the scalar gate
+    directly (identity gate), masked-mean aggregation."""
+    return EdgeSpec(use_h=True, use_d2=True, gate="identity", rel="raw",
+                    coord_clamp=coord_clamp, normalize=True)
 
 
 def ssp(x):
@@ -72,30 +82,28 @@ def schnet_apply(params, cfg: SchNetConfig, g: GeometricGraph,
                  axis_name: Optional[str] = None) -> tuple[Array, Array]:
     h = mlp(params["embed"], g.h)
     x = g.x
-    n = x.shape[0]
     vs = None
     if cfg.n_virtual > 0:
         z0 = init_virtual_coords(x, g.node_mask, cfg.n_virtual, axis_name)
         vs = VirtualState(z=z0, s=params["s_init"])
 
+    spec = edge_spec(cfg.coord_clamp)
     for lp in params["layers"]:
-        rel = x[g.receivers] - x[g.senders]
-        d2 = jnp.sum(rel**2, axis=-1)
-        d = jnp.sqrt(d2 + 1e-12)
+        _, d2 = edge_rel_d2(x, g)
+        d = jnp.sqrt(d2[:, 0] + 1e-12)
         w = mlp(lp["filter"], rbf_expand(d, cfg.n_rbf, cfg.rbf_cutoff), act=ssp)
-        # continuous-filter convolution (cfconv)
+        # continuous-filter convolution (cfconv): the RBF-filter product
+        # doesn't fit the φ1 form, so only the reduction is shared
         hj = linear(lp["in_proj"], h)[g.senders]
-        msg = hj * w * g.edge_mask[:, None]
-        agg = jax.ops.segment_sum(msg, g.receivers, num_segments=n)
+        agg = aggregate_edges(hj * w * g.edge_mask[:, None], g, normalize=False)
         h = h + mlp(lp["out"], agg, act=ssp)
         # Eq. 13: equivariant coordinate head + virtual pathway
-        gate_in = jnp.concatenate([h[g.receivers], h[g.senders], d2[:, None]], axis=-1)
-        gate = jnp.clip(mlp(lp["coord"], gate_in), -cfg.coord_clamp, cfg.coord_clamp)
-        dx_e = rel * gate * g.edge_mask[:, None]
-        deg = jnp.maximum(jax.ops.segment_sum(g.edge_mask, g.receivers, num_segments=n), 1.0)
-        dx = jax.ops.segment_sum(dx_e, g.receivers, num_segments=n) / deg[:, None]
+        dx, _ = edge_pathway({"phi1": lp["coord"]}, h, x, g, spec,
+                             use_kernel=cfg.use_kernel)
         if cfg.n_virtual > 0:
-            dx_v, _, vs = virtual_plugin_step(lp["virtual"], h, x, vs, g.node_mask, axis_name)
+            dx_v, _, vs = virtual_plugin_step(lp["virtual"], h, x, vs,
+                                              g.node_mask, axis_name,
+                                              use_kernel=cfg.use_kernel)
             dx = dx + dx_v
         if cfg.velocity:
             dx = dx + mlp(lp["phi_v"], h) * g.v

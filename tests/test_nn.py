@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro.nn import attention as attn
 from repro.nn.moe import init_moe, moe_ffn, moe_ffn_ref_dense

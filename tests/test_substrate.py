@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro.data.radius_graph import radius_graph
 from repro.training.checkpoint import restore_checkpoint, save_checkpoint
