@@ -130,11 +130,36 @@ def _scaled_rel(rel: Array, d2: Array, spec: EdgeSpec) -> Array:
     return rel
 
 
-# VMEM budget of the one-hot gather/scatter formulation: the kernel keeps
-# x/h and two (block_e, N) one-hots resident, so it is only eligible up to
-# this node count (≈8 MB of VMEM at block_e=128, hidden=64).  Larger graphs
-# fall back to jnp until the banded-CSR tiling lands (ROADMAP).
-EDGE_KERNEL_MAX_NODES = 4096
+# Per-window VMEM budget of the banded-CSR tiling (DESIGN.md §3.2): the
+# kernel's working set is bounded by the window sizes, not by N, so
+# eligibility is a budget on the per-step VMEM footprint — constant in
+# graph size.  12 MiB leaves headroom on a 16 MiB-VMEM TPU core for
+# Pallas' double-buffered pipelining of the edge/window streams.
+EDGE_KERNEL_VMEM_BUDGET = 12 * 2**20
+EDGE_KERNEL_BLOCK_E = 128
+
+
+def edge_kernel_vmem_bytes(n_nodes: int, dh: int, h1: int, m: int,
+                           block_e: int = EDGE_KERNEL_BLOCK_E) -> int:
+    """Per-grid-step VMEM footprint model of the banded edge kernel.
+
+    Counts the resident buffers of one step at the :func:`pick_windows`
+    band sizes: the two one-hots (block_e × swindow/window), the x/h
+    sender+receiver windows (×2 for the pipeline's double buffer), the
+    output blocks, and the (block_e, ·) edge intermediates.  Weights are
+    O(dh·h1) and counted once.  All terms are window-bounded — the model
+    is independent of N once the windows saturate their defaults.
+    """
+    from repro.kernels.edge_message import pick_windows
+
+    window, swindow, _ = pick_windows(n_nodes)
+    f32 = 4
+    one_hots = block_e * (swindow + window) * f32
+    node_windows = 2 * (swindow + window) * (3 + dh) * f32  # double-buffered
+    out_blocks = window * (3 + m + 1) * f32
+    edge_tmp = block_e * (3 + 1 + 2 * h1 + 2 * m) * f32
+    weights = (2 * dh * h1 + 2 * h1 + h1 * m + 2 * m + m * h1) * f32
+    return one_hots + node_windows + out_blocks + edge_tmp + weights
 
 
 def kernel_supported(lp: dict, g: GeometricGraph, spec: EdgeSpec) -> bool:
@@ -142,12 +167,12 @@ def kernel_supported(lp: dict, g: GeometricGraph, spec: EdgeSpec) -> bool:
 
     The fused Pallas edge kernel implements exactly: 2-layer φ1 over
     ``[h_i | h_j | d²]``, 2-layer (or identity) gate, masked mean
-    reduction, on graphs small enough for the one-hot formulation's VMEM
-    residency.  Anything else — extra edge attributes, deeper MLPs,
-    unnormalised sums, oversize graphs — falls back to the jnp path.
+    reduction.  Graph size no longer gates dispatch — the banded-CSR
+    tiling bounds VMEM by the node windows, so the check is a per-window
+    budget (:func:`edge_kernel_vmem_bytes`) that only unusually wide
+    hidden dims can exceed.  Anything else — extra edge attributes,
+    deeper MLPs, unnormalised sums — falls back to the jnp path.
     """
-    if g.n_nodes > EDGE_KERNEL_MAX_NODES:
-        return False
     if spec.use_edge_attr and g.edge_attr.shape[-1] > 0:
         return False
     if not spec.normalize:
@@ -156,7 +181,11 @@ def kernel_supported(lp: dict, g: GeometricGraph, spec: EdgeSpec) -> bool:
         return False
     if spec.gate == "mlp" and len(lp.get("gate", ())) != 2:
         return False
-    return True
+    w1 = lp["phi1"][0]["w"]
+    w2 = lp["phi1"][1]["w"]
+    dh = g.feat_dim if spec.use_h else 1
+    vmem = edge_kernel_vmem_bytes(g.n_nodes, dh, w1.shape[1], w2.shape[1])
+    return vmem <= EDGE_KERNEL_VMEM_BUDGET
 
 
 def edge_pathway(lp: dict, h: Array, x: Array, g: GeometricGraph,

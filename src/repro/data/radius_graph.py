@@ -9,6 +9,7 @@ so the jitted model sees static shapes.
 from __future__ import annotations
 
 import warnings
+from typing import NamedTuple
 
 import numpy as np
 
@@ -97,6 +98,110 @@ def sort_edges_by_receiver(
         return snd, rcv
     order = np.argsort(rcv, kind="stable")
     return snd[order], rcv[order]
+
+
+class BandedCSR(NamedTuple):
+    """Banded-CSR edge layout + band metadata (DESIGN.md §3.1).
+
+    The fused edge kernel tiles the node axis into receiver windows of
+    ``window`` rows and sender windows of ``swindow`` rows; edges are
+    regrouped by the (receiver-window × sender-window) band they live in,
+    each band padded to whole blocks of ``block_e`` edges.  ``senders`` /
+    ``receivers`` / ``edge_mask`` are the regrouped (capacity-padded)
+    global edge arrays; ``block_rwin`` / ``block_swin`` give each edge
+    block's window coordinates; ``window_offsets`` are per-receiver-window
+    CSR row offsets into the banded arrays (length n_windows + 1).
+    """
+
+    senders: np.ndarray  # (cap,) int32, banded order, masked slots = 0
+    receivers: np.ndarray  # (cap,) int32
+    edge_mask: np.ndarray  # (cap,) float32
+    block_rwin: np.ndarray  # (n_blocks,) int32 receiver-window per block
+    block_swin: np.ndarray  # (n_blocks,) int32 sender-window per block
+    window_offsets: np.ndarray  # (n_windows + 1,) int32 CSR rows per window
+    window: int
+    swindow: int
+    block_e: int
+    n_pad: int
+    sender_band_max: int  # max sender-index span inside one edge block
+    fill: float  # real edges / capacity (layout efficiency)
+
+
+def banded_csr_layout(
+    snd: np.ndarray, rcv: np.ndarray, n_nodes: int, *,
+    edge_mask: np.ndarray | None = None,
+    window: int | None = None, swindow: int | None = None,
+    block_e: int = 128, capacity: int | None = None,
+) -> BandedCSR:
+    """Host-side banded-CSR layout pass, emitted alongside the CSR sort.
+
+    Numpy mirror of the trace-time ``kernels.edge_message.banded_layout``
+    (same stable grouping ⇒ identical slot assignment, parity-tested in
+    ``tests/test_banded_csr.py``), plus the per-window CSR row offsets and
+    band-width diagnostics the data pipeline records.  ``capacity``
+    overrides the static slot bound (must be ≥ the computed bound) so a
+    dataset of varying graphs can share one jitted program.
+    """
+    from repro.kernels.edge_message import layout_capacity, pick_windows
+
+    e = snd.size
+    window, swindow, n_pad = pick_windows(n_nodes, window=window,
+                                          swindow=swindow)
+    nw, nsw = n_pad // window, n_pad // swindow
+    em = (np.ones(e, np.float32) if edge_mask is None
+          else np.asarray(edge_mask, np.float32))
+    snd = np.asarray(snd, np.int32)
+    rcv = np.asarray(rcv, np.int32)
+
+    band = (rcv // window) * nsw + snd // swindow
+    order = np.argsort(band, kind="stable")
+    bs = band[order]
+    counts = np.bincount(bs, minlength=nw * nsw).astype(np.int64)
+    padded = -(-counts // block_e) * block_e
+    per_w = padded.reshape(nw, nsw).sum(axis=1)
+    padded = padded.reshape(nw, nsw)
+    padded[:, 0] += np.where(per_w == 0, block_e, 0)
+    padded = padded.reshape(-1)
+    ends = np.cumsum(padded)
+    offs = ends - padded
+    gstart = np.cumsum(counts) - counts
+    pos = (offs[bs] + (np.arange(e) - gstart[bs])).astype(np.int64)
+
+    cap = layout_capacity(e, nw, nsw, block_e)
+    if capacity is not None:
+        assert capacity >= cap, (capacity, cap)
+        cap = capacity
+    n_blocks = cap // block_e
+    out_s = np.zeros(cap, np.int32)
+    out_r = np.zeros(cap, np.int32)
+    out_m = np.zeros(cap, np.float32)
+    out_s[pos] = snd[order]
+    out_r[pos] = rcv[order]
+    out_m[pos] = em[order]
+
+    bfirst = np.arange(n_blocks, dtype=np.int64) * block_e
+    bid = np.searchsorted(ends, bfirst, side="right")
+    bid = np.where(bfirst < ends[-1], bid, nw * nsw - 1)
+    block_rwin = (bid // nsw).astype(np.int32)
+    block_swin = (bid % nsw).astype(np.int32)
+
+    w_end = ends.reshape(nw, nsw)[:, -1]
+    window_offsets = np.concatenate([[0], w_end]).astype(np.int32)
+
+    span = 0
+    for b in range(n_blocks):
+        sl = out_s[b * block_e : (b + 1) * block_e]
+        live = out_m[b * block_e : (b + 1) * block_e] > 0
+        if live.any():
+            span = max(span, int(sl[live].max()) - int(sl[live].min()) + 1)
+
+    return BandedCSR(
+        senders=out_s, receivers=out_r, edge_mask=out_m,
+        block_rwin=block_rwin, block_swin=block_swin,
+        window_offsets=window_offsets, window=window, swindow=swindow,
+        block_e=block_e, n_pad=n_pad, sender_band_max=span,
+        fill=float(em.sum()) / max(cap, 1),
+    )
 
 
 def pad_edges(

@@ -1,4 +1,4 @@
-"""Fused real-real edge-pathway Pallas TPU kernel (DESIGN.md §3).
+"""Fused real-real edge-pathway Pallas TPU kernel, banded-CSR tiled (DESIGN.md §3).
 
 The dominant cost of every model in the zoo is the real-real edge pathway
 (Eq. 3 + the real parts of Eqs. 6-7).  The pure-jnp path materialises the
@@ -6,26 +6,44 @@ The dominant cost of every model in the zoo is the real-real edge pathway
 writes the gated edge vectors, and reads them again for the segment
 reduction — four HBM round-trips of O(E·hidden) each.  Following the
 E2Former-V2 idiom (linear activation memory via on-the-fly recomputation),
-this kernel streams receiver-sorted (CSR) edge blocks through VMEM and
-performs messages + gates + masked segment reduction in one pass:
+this kernel streams banded edge blocks through VMEM and performs
+messages + gates + masked segment reduction in one pass.
 
-  * grid over blocks of BE edges (the data layer's
-    ``sort_edges_by_receiver`` guarantees real edges are receiver-sorted
-    with the padding tail last, so each block's scatter targets a narrow,
-    monotone band of receiver rows — locality the sequential grid exploits);
-  * node coordinates ``x`` and features ``h`` stay VMEM-resident for the
-    whole grid (index_map → block 0), so endpoint gathers are VMEM reads;
-  * gather and scatter are expressed as one-hot matmuls against the
-    resident arrays — the MXU-native formulation of segment_sum (TPU has
-    no hardware scatter); receiver sorting makes the scatter one-hot
-    block-banded.  The (block_e, N) one-hots bound eligibility to
-    ``message_passing.EDGE_KERNEL_MAX_NODES`` nodes; exploiting the bands
-    to tile larger graphs is the planned follow-up (ROADMAP);
-  * the ``(BE, hidden)`` messages, gates and edge vectors live only in
-    VMEM registers: nothing of size O(E·hidden) ever touches HBM;
-  * outputs (dx, mh, deg) are accumulated across grid steps in resident
-    output blocks (TPU sequential-grid guarantee) and degree-normalised
-    once by the final step.
+Banded-CSR tiling
+-----------------
+The original formulation kept ``x``/``h`` fully VMEM-resident and expressed
+gather/scatter as one-hot matmuls of shape ``(block_e, N)``, which bounded
+eligibility to ~4K nodes — silently excluding the Water-3D (8K) and
+Fluid113K (113K) scales the paper targets.  The tiled formulation bounds
+every VMEM buffer by a *node window* instead of N:
+
+  * the node axis is cut into **receiver windows** of ``window`` rows and
+    **sender windows** of ``swindow`` rows (``window | swindow | n_pad``);
+  * :func:`banded_layout` regroups the (receiver-sorted) edge list by the
+    ``(receiver-window, sender-window)`` band each edge lives in, padding
+    every band to whole blocks of ``block_e`` edges — so *by construction*
+    each edge block gathers from exactly one sender window and scatters
+    into exactly one receiver window, for any graph (senders that stray
+    outside a narrow band simply land in a different band's blocks);
+  * a 1-D grid walks the edge blocks in receiver-window-major order; the
+    per-block window coordinates are scalar-prefetched
+    (``pltpu.PrefetchScalarGridSpec``) so the BlockSpec index maps stream
+    the right ``(window, ·)`` / ``(swindow, ·)`` slices of x/h — the
+    windowed double-buffer (Pallas pipelines the next block's DMA while
+    the current one computes);
+  * gather/scatter one-hots shrink from ``(block_e, N)`` to
+    ``(block_e, swindow)`` / ``(block_e, window)`` — the MXU-native
+    segment-sum formulation, now with N-independent VMEM;
+  * the ``(block_e, hidden)`` messages, gates and edge vectors live only
+    in VMEM registers: nothing of size O(E·hidden) ever touches HBM;
+  * output blocks (dx, mh, deg) are revisited only by the contiguous run
+    of their receiver window's edge blocks (TPU keeps a revisited output
+    block VMEM-resident across consecutive grid steps): the first block of
+    a window zeroes it, the last degree-normalises it.
+
+Eligibility is now a *VMEM budget* (``message_passing.kernel_supported``)
+computed from ``block_e``, the window sizes and the hidden dims — constant
+in N — instead of a node-count ceiling.
 
 Static flags select the model variant (DESIGN.md §3.2): ``gate_mode`` in
 {'mlp', 'identity', 'none'} and ``rel_mode`` in {'raw', 'inv1p'} cover
@@ -44,49 +62,149 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 Array = jax.Array
 
+LANE = 128  # TPU lane width: one-hot minor dims should be multiples of this
+DEFAULT_WINDOW = 512  # receiver-window rows (scatter band)
+DEFAULT_SWINDOW = 4096  # sender-window rows (gather band)
+
+
+def _round_up(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+def pick_windows(n_nodes: int, *, window: int | None = None,
+                 swindow: int | None = None) -> tuple[int, int, int]:
+    """Window policy: (window, swindow, n_pad) for an ``n_nodes`` graph.
+
+    Small graphs degenerate to a single window (the dense formulation,
+    minus the N-residency); large graphs tile at the default band sizes.
+    Invariant: ``window | swindow`` and ``swindow | n_pad`` so every
+    window boundary is block-aligned for the BlockSpec index maps.
+    """
+    base = _round_up(max(n_nodes, 1), LANE)
+    if swindow is None:
+        swindow = min(DEFAULT_SWINDOW, base)
+    if window is None:
+        window = swindow
+        for cand in (DEFAULT_WINDOW, 256, LANE):
+            if swindow % cand == 0:
+                window = min(window, cand) if swindow > cand else window
+                break
+        if swindow % window != 0:  # pragma: no cover - policy invariant
+            window = swindow
+    assert swindow % window == 0, (window, swindow)
+    n_pad = _round_up(max(n_nodes, 1), swindow)
+    return window, swindow, n_pad
+
+
+def layout_capacity(e: int, nw: int, nsw: int, block_e: int) -> int:
+    """Static upper bound on banded-layout slots (DESIGN.md §3.1).
+
+    Each nonempty (receiver-window × sender-window) band wastes at most
+    ``block_e − 1`` padding slots; each empty receiver window still gets
+    one all-masked block so its output block is visited (zeroed) exactly
+    once.  Bands nonempty ≤ min(nw·nsw, e).
+    """
+    used = e + min(nw * nsw, max(e, 1)) * (block_e - 1) + nw * block_e
+    return _round_up(used, block_e)
+
+
+def banded_layout(snd: Array, rcv: Array, em: Array, *, n_pad: int,
+                  window: int, swindow: int, block_e: int):
+    """Regroup edges into (receiver-window × sender-window) bands.
+
+    Trace-time (jnp) mirror of the host-side
+    ``data.radius_graph.banded_csr_layout`` — same stable grouping, so the
+    two agree slot-for-slot (tested in ``tests/test_banded_csr.py``).
+
+    Returns ``(snd_loc, rcv_loc, em_b, block_rwin, block_swin, n_blocks)``:
+    window-local endpoint indices in banded order (capacity-padded, masked
+    slots have em=0) plus per-block window coordinates for scalar prefetch.
+    ``n_blocks`` is static (from :func:`layout_capacity`).
+    """
+    e = snd.shape[0]
+    nw = n_pad // window
+    nsw = n_pad // swindow
+    n_bands = nw * nsw
+    snd = snd.astype(jnp.int32)
+    rcv = rcv.astype(jnp.int32)
+    band = (rcv // window) * nsw + snd // swindow  # (E,)
+    order = jnp.argsort(band, stable=True)
+    bs = band[order]
+    counts = jnp.zeros((n_bands,), jnp.int32).at[bs].add(1)
+    padded = ((counts + block_e - 1) // block_e) * block_e
+    # every receiver window gets ≥ 1 block so its output block is zeroed
+    per_w = padded.reshape(nw, nsw).sum(axis=1)
+    padded = (padded.reshape(nw, nsw)
+              .at[:, 0].add(jnp.where(per_w == 0, block_e, 0))
+              .reshape(-1))
+    ends = jnp.cumsum(padded)
+    offs = ends - padded
+    gstart = jnp.cumsum(counts) - counts
+    pos = offs[bs] + (jnp.arange(e, dtype=jnp.int32) - gstart[bs])
+    cap = layout_capacity(e, nw, nsw, block_e)
+    n_blocks = cap // block_e
+    snd_loc = jnp.zeros((cap,), jnp.int32).at[pos].set(snd[order] % swindow)
+    rcv_loc = jnp.zeros((cap,), jnp.int32).at[pos].set(rcv[order] % window)
+    em_b = jnp.zeros((cap,), em.dtype).at[pos].set(em[order])
+    bfirst = jnp.arange(n_blocks, dtype=jnp.int32) * block_e
+    bid = jnp.searchsorted(ends, bfirst, side="right").astype(jnp.int32)
+    # capacity-tail blocks (all-masked) extend the last receiver window's
+    # contiguous run, so init/normalise stay once-per-window
+    bid = jnp.where(bfirst < ends[-1], bid, n_bands - 1)
+    block_rwin = bid // nsw
+    block_swin = bid % nsw
+    return snd_loc, rcv_loc, em_b, block_rwin, block_swin, n_blocks
+
 
 def _edge_kernel(
-    snd_ref, rcv_ref, em_ref, x_ref, h_ref,
+    rwin_ref, swin_ref,  # scalar-prefetched (n_blocks,) window coords
+    snd_ref, rcv_ref, em_ref, xr_ref, hr_ref, xs_ref, hs_ref,
     w1r_ref, w1s_ref, w1d_ref, b1_ref, w2_ref, b2_ref,
     wg1_ref, bg1_ref, wg2_ref,
     dx_ref, mh_ref, deg_ref,
     *, gate_mode: str, rel_mode: str, clamp: float,
 ):
-    i = pl.program_id(0)
-    n = x_ref.shape[0]
+    b = pl.program_id(0)
+    nb = pl.num_programs(0)
+    rwb = rwin_ref[b]
+    rw_prev = jnp.where(b > 0, rwin_ref[jnp.maximum(b - 1, 0)], -1)
+    rw_next = jnp.where(b < nb - 1, rwin_ref[jnp.minimum(b + 1, nb - 1)], -1)
 
-    @pl.when(i == 0)
+    @pl.when(rwb != rw_prev)  # first block of this receiver window
     def _init():
         dx_ref[...] = jnp.zeros_like(dx_ref)
         mh_ref[...] = jnp.zeros_like(mh_ref)
         deg_ref[...] = jnp.zeros_like(deg_ref)
 
-    snd = snd_ref[...]  # (BE, 1) int32
-    rcv = rcv_ref[...]  # (BE, 1) int32
+    snd = snd_ref[...]  # (BE, 1) int32, sender-window-local
+    rcv = rcv_ref[...]  # (BE, 1) int32, receiver-window-local
     em = em_ref[...]  # (BE, 1)
     be = snd.shape[0]
-    # One-hot gather/scatter operands (MXU-native segment ops).  With
-    # receiver-sorted edges oh_r is block-banded: each grid step's scatter
-    # hits a contiguous window of receiver rows.
-    ids = jax.lax.broadcasted_iota(jnp.int32, (be, n), 1)
-    oh_s = (snd == ids).astype(x_ref.dtype)  # (BE, N)
-    oh_r = (rcv == ids).astype(x_ref.dtype)
+    sw = xs_ref.shape[0]
+    w = xr_ref.shape[0]
+    # Banded one-hot gather/scatter operands (MXU-native segment ops):
+    # (BE, swindow) against the sender window, (BE, window) against the
+    # receiver window — VMEM cost independent of N.  Masked slots carry
+    # local index 0: they gather finite garbage and scatter em=0 ⇒ no-ops.
+    oh_s = (snd == jax.lax.broadcasted_iota(jnp.int32, (be, sw), 1)
+            ).astype(xs_ref.dtype)
+    oh_r = (rcv == jax.lax.broadcasted_iota(jnp.int32, (be, w), 1)
+            ).astype(xr_ref.dtype)
 
-    x = x_ref[...]
-    xs = oh_s @ x  # (BE, 3) endpoint gathers
-    xr = oh_r @ x
+    xs = oh_s @ xs_ref[...]  # (BE, 3) endpoint gathers
+    xr = oh_r @ xr_ref[...]
     rel = xr - xs
     d2 = jnp.sum(rel * rel, axis=-1, keepdims=True)  # (BE, 1)
 
-    h = h_ref[...]
     # φ1 layer 1 over [h_r | h_s | d²] with the weight matrix pre-split by
     # input slice; zero-width/zero-weight slices fall out as no-ops.
     t1 = jax.nn.silu(
-        oh_r @ h @ w1r_ref[...]
-        + oh_s @ h @ w1s_ref[...]
+        oh_r @ hr_ref[...] @ w1r_ref[...]
+        + oh_s @ hs_ref[...] @ w1s_ref[...]
         + d2 @ w1d_ref[...]
         + b1_ref[...]
     )
@@ -105,9 +223,9 @@ def _edge_kernel(
             rel = rel / (jnp.sqrt(d2 + 1e-12) + 1.0)
         dx_ref[...] += oh_r.T @ (rel * gate * em)
 
-    @pl.when(i == pl.num_programs(0) - 1)
+    @pl.when(rwb != rw_next)  # last block of this receiver window
     def _normalize():
-        inv = 1.0 / jnp.maximum(deg_ref[...], 1.0)  # (N, 1)
+        inv = 1.0 / jnp.maximum(deg_ref[...], 1.0)  # (window, 1)
         mh_ref[...] = mh_ref[...] * inv
         if gate_mode != "none":
             dx_ref[...] = dx_ref[...] * inv
@@ -115,7 +233,8 @@ def _edge_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("gate_mode", "rel_mode", "clamp", "block_e", "interpret"),
+    static_argnames=("gate_mode", "rel_mode", "clamp", "block_e",
+                     "window", "swindow", "interpret"),
 )
 def edge_pathway_fused(
     x: Array, h: Array, snd: Array, rcv: Array, em: Array,
@@ -123,13 +242,20 @@ def edge_pathway_fused(
     w2: Array, b2: Array,
     wg1: Array, bg1: Array, wg2: Array,
     *, gate_mode: str = "mlp", rel_mode: str = "raw",
-    clamp: float = math.inf, block_e: int = 128, interpret: bool = True,
+    clamp: float = math.inf, block_e: int = 128,
+    window: int | None = None, swindow: int | None = None,
+    interpret: bool = True,
 ):
     """See ``repro.kernels.ref.edge_pathway_ref`` for the exact contract.
 
     Shapes: x (N,3), h (N,Dh≥1), snd/rcv (E,) int32 receiver-sorted,
     em (E,); weights as 2-D matrices (row vectors for biases).  Returns
     (dx (N,3), mh (N,M), deg (N,1)) with masked-mean normalisation.
+
+    ``window``/``swindow`` override the :func:`pick_windows` band policy
+    (tests sweep them); the banded regrouping runs at trace time, so any
+    edge order and any sender distribution are handled — receiver sorting
+    only improves band fill, never correctness.
     """
     n = x.shape[0]
     m = w2.shape[1]
@@ -137,36 +263,48 @@ def edge_pathway_fused(
     if e == 0:  # empty graph: nothing to reduce (edge-drop p=1.0 story)
         return (jnp.zeros((n, 3), x.dtype), jnp.zeros((n, m), x.dtype),
                 jnp.zeros((n, 1), x.dtype))
-    e_pad = -(-e // block_e) * block_e
-    if e_pad != e:
-        pad = e_pad - e
-        snd = jnp.pad(snd, (0, pad))  # padded edges masked out via em=0
-        rcv = jnp.pad(rcv, (0, pad))
-        em = jnp.pad(em, (0, pad))
-    snd2 = snd.astype(jnp.int32)[:, None]
-    rcv2 = rcv.astype(jnp.int32)[:, None]
-    em2 = em[:, None].astype(x.dtype)
+    window, swindow, n_pad = pick_windows(n, window=window, swindow=swindow)
+    snd_loc, rcv_loc, em_b, block_rwin, block_swin, n_blocks = banded_layout(
+        snd, rcv, em, n_pad=n_pad, window=window, swindow=swindow,
+        block_e=block_e)
+    if n_pad != n:
+        pad = n_pad - n
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        h = jnp.pad(h, ((0, pad), (0, 0)))
+    snd2 = snd_loc[:, None]
+    rcv2 = rcv_loc[:, None]
+    em2 = em_b[:, None].astype(x.dtype)
 
-    full = lambda a: pl.BlockSpec(a.shape, lambda i: (0,) * a.ndim)
-    eblk = lambda width: pl.BlockSpec((block_e, width), lambda i: (i, 0))
-    out_full = lambda *shape: pl.BlockSpec(shape, lambda i: (0,) * len(shape))
+    dh = h.shape[1]
+    full = lambda a: pl.BlockSpec(a.shape, lambda b, rw, sw: (0,) * a.ndim)
+    eblk = pl.BlockSpec((block_e, 1), lambda b, rw, sw: (b, 0))
+    rblk = lambda width: pl.BlockSpec((window, width),
+                                      lambda b, rw, sw: (rw[b], 0))
+    sblk = lambda width: pl.BlockSpec((swindow, width),
+                                      lambda b, rw, sw: (sw[b], 0))
 
     kernel = functools.partial(_edge_kernel, gate_mode=gate_mode,
                                rel_mode=rel_mode, clamp=clamp)
-    dx, mh, deg = pl.pallas_call(
-        kernel,
-        grid=(e_pad // block_e,),
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_blocks,),
         in_specs=[
-            eblk(1), eblk(1), eblk(1), full(x), full(h),
+            eblk, eblk, eblk,
+            rblk(3), rblk(dh), sblk(3), sblk(dh),
             full(w1r), full(w1s), full(w1d), full(b1), full(w2), full(b2),
             full(wg1), full(bg1), full(wg2),
         ],
-        out_specs=(out_full(n, 3), out_full(n, m), out_full(n, 1)),
+        out_specs=(rblk(3), rblk(m), rblk(1)),
+    )
+    dx, mh, deg = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
         out_shape=(
-            jax.ShapeDtypeStruct((n, 3), x.dtype),
-            jax.ShapeDtypeStruct((n, m), x.dtype),
-            jax.ShapeDtypeStruct((n, 1), x.dtype),
+            jax.ShapeDtypeStruct((n_pad, 3), x.dtype),
+            jax.ShapeDtypeStruct((n_pad, m), x.dtype),
+            jax.ShapeDtypeStruct((n_pad, 1), x.dtype),
         ),
         interpret=interpret,
-    )(snd2, rcv2, em2, x, h, w1r, w1s, w1d, b1, w2, b2, wg1, bg1, wg2)
-    return dx, mh, deg
+    )(block_rwin, block_swin, snd2, rcv2, em2, x, h, x, h,
+      w1r, w1s, w1d, b1, w2, b2, wg1, bg1, wg2)
+    return dx[:n], mh[:n], deg[:n]

@@ -32,9 +32,12 @@ def _interpret() -> bool:
 def _edge_custom(gate_mode: str, rel_mode: str, clamp: float):
     """Per-variant custom_vjp wrapper (cached so jit caches stay warm).
 
-    Forward: fused Pallas kernel.  Backward: rematerialise through the
-    pure-jnp oracle (flash-style recompute — no (E, hidden) residuals).
-    Integer edge indices get float0 cotangents.
+    Forward: fused Pallas kernel — banded-CSR tiled, so any graph size the
+    VMEM-budget check admits dispatches here; the banded regrouping runs
+    inside the fused forward at trace time.  Backward: rematerialise
+    through the pure-jnp oracle on the *original* (un-regrouped) edge
+    list (flash-style recompute — no (E, hidden) residuals).  Integer
+    edge indices get float0 cotangents.
     """
 
     @jax.custom_vjp
@@ -100,7 +103,9 @@ def edge_pathway(lp, h: Array, x: Array, g, spec) -> tuple[Array, Array]:
     """Kernel-backed replacement for the jnp edge pathway.
 
     Returns (dx (N,3), mh (N,M)); eligibility is checked by the caller
-    (``core.message_passing.kernel_supported``).
+    (``core.message_passing.kernel_supported`` — a per-window VMEM budget,
+    constant in graph size, so Water-3D 8K and Fluid113K-scale graphs
+    dispatch here rather than falling back to jnp).
     """
     hk, ws = unpack_edge_params(lp, h, spec)
     f = _edge_custom(spec.gate, spec.rel, float(spec.coord_clamp))

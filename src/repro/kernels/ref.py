@@ -78,6 +78,12 @@ def edge_pathway_ref(
 
     Returns (dx (N,3), mh (N,M), deg (N,1)) — masked-mean aggregation onto
     receivers.  ``dx`` is zeros when gate_mode='none'.
+
+    Edge-order invariant (segment sums commute), so this single oracle is
+    the ground truth for every tiling of the fused kernel: the banded-CSR
+    regrouping only permutes and mask-pads the edge list, which this
+    function is insensitive to.  Parity at the new tilings is enforced in
+    ``tests/test_kernels.py`` and ``tests/test_banded_csr.py``.
     """
     n = x.shape[0]
     rel = x[rcv] - x[snd]  # (E, 3)

@@ -1,0 +1,126 @@
+"""Banded-CSR layout: host (numpy) builder ↔ trace-time (jnp) regrouping
+parity, layout invariants, and the VMEM-budget eligibility envelope."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import message_passing as mp
+from repro.core.graph import make_graph
+from repro.core.mlp import init_mlp
+from repro.data.radius_graph import banded_csr_layout, sort_edges_by_receiver
+from repro.kernels.edge_message import (banded_layout, layout_capacity,
+                                        pick_windows)
+
+
+def _random_edges(n, e, seed=0, masked=True):
+    rng = np.random.default_rng(seed)
+    snd = rng.integers(0, n, e).astype(np.int32)
+    rcv = rng.integers(0, n, e).astype(np.int32)
+    snd, rcv = sort_edges_by_receiver(snd, rcv)
+    em = ((rng.random(e) > 0.2).astype(np.float32) if masked
+          else np.ones(e, np.float32))
+    return snd, rcv, em
+
+
+@pytest.mark.parametrize("n,e,block_e", [(100, 400, 32), (1000, 3000, 64),
+                                         (8192, 10000, 128)])
+def test_host_layout_matches_trace_layout(n, e, block_e):
+    """The data layer's numpy pass and the kernel's jnp regrouping use the
+    same stable grouping, so they must agree slot-for-slot."""
+    snd, rcv, em = _random_edges(n, e, seed=n)
+    host = banded_csr_layout(snd, rcv, n, edge_mask=em, block_e=block_e)
+    window, swindow, n_pad = pick_windows(n)
+    assert (host.window, host.swindow, host.n_pad) == (window, swindow, n_pad)
+
+    snd_l, rcv_l, em_b, rwin, swin, nb = banded_layout(
+        jnp.asarray(snd), jnp.asarray(rcv), jnp.asarray(em),
+        n_pad=n_pad, window=window, swindow=swindow, block_e=block_e)
+    assert nb == host.block_rwin.size
+    np.testing.assert_array_equal(np.asarray(rwin), host.block_rwin)
+    np.testing.assert_array_equal(np.asarray(swin), host.block_swin)
+    np.testing.assert_array_equal(np.asarray(em_b), host.edge_mask)
+    live = host.edge_mask > 0
+    np.testing.assert_array_equal(np.asarray(snd_l)[live],
+                                  host.senders[live] % swindow)
+    np.testing.assert_array_equal(np.asarray(rcv_l)[live],
+                                  host.receivers[live] % window)
+
+
+@pytest.mark.parametrize("n,e", [(300, 900), (5000, 20000)])
+def test_layout_invariants(n, e):
+    """Every live edge sits in a block whose window coordinates contain
+    both its endpoints; every receiver window owns ≥ 1 block; blocks of a
+    window are contiguous (the kernel's init/normalise contract)."""
+    snd, rcv, em = _random_edges(n, e, seed=e)
+    L = banded_csr_layout(snd, rcv, n, edge_mask=em)
+    be = L.block_e
+    nb = L.block_rwin.size
+    assert nb * be == L.senders.size
+    for b in range(nb):
+        sl = slice(b * be, (b + 1) * be)
+        live = L.edge_mask[sl] > 0
+        if live.any():
+            r = L.receivers[sl][live]
+            s = L.senders[sl][live]
+            assert (r // L.window == L.block_rwin[b]).all()
+            assert (s // L.swindow == L.block_swin[b]).all()
+    nw = L.n_pad // L.window
+    assert sorted(set(L.block_rwin.tolist())) == list(range(nw))
+    # contiguity: receiver-window ids are non-decreasing over blocks
+    assert (np.diff(L.block_rwin) >= 0).all()
+    # conservation: no live edge lost or duplicated
+    assert int((L.edge_mask > 0).sum()) == int((em > 0).sum())
+    # per-window CSR offsets cover all blocks
+    assert L.window_offsets[0] == 0
+    assert L.window_offsets[-1] <= L.senders.size
+    assert (np.diff(L.window_offsets) >= 0).all()
+
+
+def test_layout_capacity_bound():
+    """Used slots never exceed the static capacity bound."""
+    for n, e, seed in [(128, 50, 0), (4096, 100, 1), (9000, 40000, 2)]:
+        snd, rcv, em = _random_edges(n, e, seed=seed, masked=False)
+        window, swindow, n_pad = pick_windows(n)
+        nw, nsw = n_pad // window, n_pad // swindow
+        L = banded_csr_layout(snd, rcv, n, edge_mask=em)
+        assert L.senders.size == layout_capacity(e, nw, nsw, L.block_e)
+
+
+def test_pick_windows_policy():
+    """Small graphs degenerate to one window; large graphs saturate the
+    defaults; window always divides swindow divides n_pad."""
+    for n in [1, 33, 128, 600, 4096, 4097, 8192, 65536, 113000]:
+        w, sw, n_pad = pick_windows(n)
+        assert sw % w == 0 and n_pad % sw == 0 and n_pad >= n
+    assert pick_windows(8192) == (512, 4096, 8192)
+    assert pick_windows(65536) == (512, 4096, 65536)
+    assert pick_windows(100)[:2] == (128, 128)
+
+
+@pytest.mark.parametrize("n", [8192, 65536, 113000])
+def test_kernel_eligible_at_paper_scales(n):
+    """The tentpole acceptance criterion: the fused path is eligible at
+    Water-3D (8K) and Fluid113K scale — the VMEM budget is constant in N."""
+    spec = mp.EdgeSpec(coord_clamp=100.0)
+    hid = 64
+    lp = {"phi1": init_mlp(jax.random.PRNGKey(0), [2 * hid + 1, hid, hid]),
+          "gate": init_mlp(jax.random.PRNGKey(1), [hid, hid, 1],
+                           final_bias=False)}
+    g = make_graph(jnp.zeros((n, 3)), None, jnp.zeros((n, hid)),
+                   jnp.zeros((4,), jnp.int32), jnp.zeros((4,), jnp.int32))
+    assert mp.kernel_supported(lp, g, spec)
+    assert mp.edge_kernel_vmem_bytes(n, hid, hid, hid) \
+        == mp.edge_kernel_vmem_bytes(10 * n, hid, hid, hid)
+
+
+def test_kernel_ineligible_when_budget_exceeded():
+    """Unusually wide hidden dims still fall back to jnp."""
+    spec = mp.EdgeSpec(coord_clamp=100.0)
+    hid = 4096
+    lp = {"phi1": init_mlp(jax.random.PRNGKey(0), [2 * hid + 1, hid, hid]),
+          "gate": init_mlp(jax.random.PRNGKey(1), [hid, hid, 1],
+                           final_bias=False)}
+    g = make_graph(jnp.zeros((512, 3)), None, jnp.zeros((512, hid)),
+                   jnp.zeros((4,), jnp.int32), jnp.zeros((4,), jnp.int32))
+    assert not mp.kernel_supported(lp, g, spec)

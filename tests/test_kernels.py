@@ -215,6 +215,112 @@ def test_edge_pathway_kernel_vmap_batch():
                                rtol=1e-4, atol=1e-4)
 
 
+def _skewed_graph(n, e, dh, seed=0):
+    """Receiver-sorted graph with a power-law receiver-band distribution
+    (some node windows carry ~30× the mean edge load) and senders drawn
+    uniformly — so most edge blocks gather from sender windows far from
+    their receiver window."""
+    rng = np.random.default_rng(seed)
+    rcv = np.minimum((n * rng.random(e) ** 3).astype(np.int64), n - 1)
+    snd = rng.integers(0, n, e)
+    rcv = np.sort(rcv)  # CSR contract
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    x = jax.random.normal(ks[0], (n, 3))
+    h = jax.random.normal(ks[1], (n, dh)) if dh else jnp.zeros((n, 0))
+    em = (rng.random(e) > 0.1).astype(np.float32)
+    g = make_graph(x, None, h, snd.astype(np.int32), rcv.astype(np.int32),
+                   edge_mask=em)
+    return x, h, g
+
+
+def test_edge_pathway_kernel_8k_skewed_bands():
+    """Tentpole acceptance: fwd parity at n=8192 (past the old 4096 node
+    ceiling), non-uniform receiver bands, senders outside the receiver
+    window.  Multi-window tiling: 16 receiver × 2 sender windows."""
+    n, e, dh, hid = 8192, 16384, 16, 32
+    spec = _EDGE_SPECS["egnn"]
+    x, h, g = _skewed_graph(n, e, dh, seed=8)
+    lp = _edge_params(jax.random.PRNGKey(1), dh, hid, spec)
+    assert mp.kernel_supported(lp, g, spec)
+
+    hk, ws = kops.unpack_edge_params(lp, h, spec)
+    got = edge_pathway_fused(
+        x, hk, g.senders, g.receivers, g.edge_mask, *ws,
+        gate_mode=spec.gate, rel_mode=spec.rel, clamp=spec.coord_clamp,
+        interpret=True)
+    want = ref.edge_pathway_ref(
+        x, hk, g.senders, g.receivers, g.edge_mask, *ws,
+        gate_mode=spec.gate, rel_mode=spec.rel, clamp=spec.coord_clamp)
+    for k, r in zip(got, want):
+        np.testing.assert_allclose(np.asarray(k), np.asarray(r),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_edge_pathway_kernel_8k_grads():
+    """Grad parity (custom_vjp remat through the oracle) at n=8192."""
+    n, e, dh, hid = 8192, 8192, 8, 16
+    spec = _EDGE_SPECS["egnn"]
+    x, h, g = _skewed_graph(n, e, dh, seed=9)
+    lp = _edge_params(jax.random.PRNGKey(2), dh, hid, spec)
+    assert mp.kernel_supported(lp, g, spec)
+
+    def loss(use_kernel):
+        def f(lp, x, h):
+            o = mp.edge_pathway(lp, h, x, g, spec, use_kernel=use_kernel)
+            return jnp.sum(o.mh ** 2) + jnp.sum(o.dx ** 2)
+        return f
+
+    gk = jax.grad(loss(True), argnums=(0, 1, 2))(lp, x, h)
+    gj = jax.grad(loss(False), argnums=(0, 1, 2))(lp, x, h)
+
+    def assert_close(a, b):
+        scale = float(jnp.max(jnp.abs(b))) + 1e-6
+        np.testing.assert_allclose(np.asarray(a) / scale,
+                                   np.asarray(b) / scale,
+                                   rtol=1e-3, atol=1e-5)
+
+    jax.tree.map(assert_close, gk, gj)
+
+
+def test_edge_pathway_kernel_vmap_above_old_ceiling():
+    """vmap'd dispatch at n > 4096 (the old EDGE_KERNEL_MAX_NODES bound)."""
+    n, e, dh, hid = 4608, 4096, 8, 16
+    spec = _EDGE_SPECS["egnn"]
+    x, h, g = _skewed_graph(n, e, dh, seed=10)
+    lp = _edge_params(jax.random.PRNGKey(3), dh, hid, spec)
+    assert mp.kernel_supported(lp, g, spec)
+    xb = jnp.stack([x, x + 0.1])
+    hb = jnp.stack([h, h * 0.5])
+    fk = jax.vmap(lambda x, h: mp.edge_pathway(lp, h, x, g, spec,
+                                               use_kernel=True).dx)
+    fj = jax.vmap(lambda x, h: mp.edge_pathway(lp, h, x, g, spec).dx)
+    np.testing.assert_allclose(np.asarray(fk(xb, hb)), np.asarray(fj(xb, hb)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_edge_pathway_kernel_explicit_small_windows():
+    """Sweep explicit (window, swindow) overrides: every tiling must hit
+    the same oracle numbers, including blocks whose senders fall outside
+    the (much narrower) receiver window."""
+    n, e, dh, hid = 700, 1500, 8, 16
+    spec = _EDGE_SPECS["schnet"]
+    x, h, g = _skewed_graph(n, e, dh, seed=11)
+    lp = _edge_params(jax.random.PRNGKey(4), dh, hid, spec)
+    hk, ws = kops.unpack_edge_params(lp, h, spec)
+    want = ref.edge_pathway_ref(
+        x, hk, g.senders, g.receivers, g.edge_mask, *ws,
+        gate_mode=spec.gate, rel_mode=spec.rel, clamp=spec.coord_clamp)
+    for window, swindow in [(128, 128), (128, 256), (256, 512), (512, 512)]:
+        got = edge_pathway_fused(
+            x, hk, g.senders, g.receivers, g.edge_mask, *ws,
+            gate_mode=spec.gate, rel_mode=spec.rel, clamp=spec.coord_clamp,
+            block_e=64, window=window, swindow=swindow, interpret=True)
+        for k, r in zip(got, want):
+            np.testing.assert_allclose(np.asarray(k), np.asarray(r),
+                                       rtol=1e-4, atol=1e-4,
+                                       err_msg=f"tiling {window}x{swindow}")
+
+
 @pytest.mark.parametrize("n,c,sigma,block", [(100, 3, 1.5, 64), (1024, 10, 3.0, 256),
                                              (33, 1, 0.7, 1024)])
 def test_mmd_kernel(n, c, sigma, block):
