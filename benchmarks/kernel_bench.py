@@ -10,14 +10,24 @@ recorded to ``BENCH_edge_kernel.json`` together with the banded-CSR
 tiling metadata (windows, blocks, fill, sender band width).  On TPU the
 fused kernels are timed directly (``kernel_mode: "tpu"``).
 
+The distributed sweep (``--dist D``) times ``build_dist_apply`` on D
+forced host devices for both edge-pathway modes and records
+``dist_kernel_mode`` rows (``jnp`` / ``interpret`` / ``tpu`` /
+``fallback``) with the dispatch-telemetry counts — asserting the
+per-shard fused path *dispatched with zero trace-time regroups*, not
+just that it didn't error.
+
 CLI::
 
     python -m benchmarks.kernel_bench [--sizes 1024,8192] [--json PATH]
         [--gate-eligible N]   # exit 1 unless kernel_eligible at n=N
+        [--dist D]            # also record dist_kernel_mode rows (D shards)
+        [--gate-dist]         # exit 1 unless the dist fused row dispatched
 
 ``--gate-eligible`` is the CI regression gate for the banded-CSR tiling:
 it fails the bench-smoke job if the fused path ever loses eligibility at
-Water-3D scale (n=8192).
+Water-3D scale (n=8192).  ``--gate-dist`` is the distributed-job gate for
+the per-shard fused path (DESIGN.md §6.6).
 """
 from __future__ import annotations
 
@@ -51,6 +61,19 @@ def _time(fn, *args, reps: int = 5) -> float:
 EDGE_BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_edge_kernel.json")
 FULL_SIZES = (1024, 8192, 65536)
+
+
+def _read_bench_json(json_path: str) -> dict:
+    """Guarded read of the bench JSON, shared by every writer that merges
+    into it: a missing/corrupt file degrades to empty rather than losing a
+    completed run at write time."""
+    if os.path.exists(json_path):
+        try:
+            with open(json_path) as f:
+                return json.load(f)
+        except (OSError, ValueError):
+            pass
+    return {"rows": []}
 
 
 def run_edge(quick: bool = True, deg: int = 8, hid: int = 64,
@@ -119,10 +142,112 @@ def run_edge(quick: bool = True, deg: int = 8, hid: int = 64,
     if json_path is None and not quick:
         json_path = EDGE_BENCH_JSON
     if json_path is not None:
+        # preserve dist_kernel_mode rows other writers (table45, a previous
+        # --dist run) merged into this file — the sweep only owns its own
+        # single-device rows
+        old = _read_bench_json(json_path)
+        payload = dict(backend=jax.default_backend(), deg=deg,
+                       rows=list(rows) + [r for r in old.get("rows", [])
+                                          if r.get("kind") == "dist_edge"])
         with open(json_path, "w") as f:
-            json.dump(dict(backend=jax.default_backend(), deg=deg, rows=rows),
-                      f, indent=2)
+            json.dump(payload, f, indent=2)
     return rows
+
+
+_DIST_CHILD = """
+import json, time, jax, numpy as np
+from repro.core import message_passing as mp
+from repro.data.fluid import generate_fluid_dataset
+from repro.data.partition import partition_sample
+from repro.distributed.dist_egnn import (make_gnn_mesh, stack_partitions,
+                                         build_dist_apply)
+from repro.models.fast_egnn import FastEGNNConfig, init_fast_egnn
+
+D, N = {d}, {n}
+data = generate_fluid_dataset(1, n_particles=N, seed=0)
+pgs = [partition_sample(s.x0, s.v0, s.h, s.x1, d=D, r=0.05, seed=j)
+       for j, s in enumerate(data)]
+sb = stack_partitions(pgs)
+mesh = make_gnn_mesh(D)
+backend_mode = "tpu" if jax.default_backend() == "tpu" else "interpret"
+rows = []
+for use_kernel in (False, True):
+    cfg = FastEGNNConfig(n_layers=2, hidden=32, h_in=1, n_virtual=3,
+                         s_dim=16, use_kernel=use_kernel)
+    params = init_fast_egnn(jax.random.PRNGKey(0), cfg)
+    mp.reset_dispatch_counts()
+    f = build_dist_apply(cfg, mesh)
+    jax.block_until_ready(f(params, sb))  # compile (traces count dispatch)
+    c = mp.dispatch_counts()
+    reps = 3 if (backend_mode == "tpu" or not use_kernel) else 1
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(params, sb))
+    t_us = (time.perf_counter() - t0) / reps * 1e6
+    mode = mp.dispatch_mode(c, use_kernel, backend_mode)
+    rows.append(dict(kind="dist_edge", d=D, n=N, use_kernel=use_kernel,
+                     dist_kernel_mode=mode, step_us=t_us,
+                     regroups=c.get("edge_layout_regroup", 0),
+                     layout_host=c.get("edge_layout_host", 0)))
+print(json.dumps(rows))
+"""
+
+
+def run_dist(d: int = 2, n: int = 512, source: str = "kernel_bench") -> list[dict]:
+    """Per-shard fused path vs jnp under ``shard_map`` (D forced host devices).
+
+    Runs in a subprocess (the parent keeps its single device) and returns
+    ``dist_kernel_mode`` rows: mode, per-apply timing and the dispatch
+    telemetry (``regroups`` must be 0 on the fused row — the host layout
+    reached the kernel).  Interpret timings are emulation numbers, recorded
+    for trajectory only.
+    """
+    import subprocess
+    import sys
+    import textwrap
+
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={d}"
+    env.setdefault("PYTHONPATH", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_DIST_CHILD.format(d=d, n=n))],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    if out.returncode != 0:
+        emit(f"kernel/dist_edge_d{d}", 0.0, f"ERROR:{out.stderr[-200:]}")
+        return []
+    rows = json.loads(out.stdout.strip().splitlines()[-1])
+    for r in rows:
+        r["source"] = source
+        emit(f"kernel/dist_edge_d{d}_{r['dist_kernel_mode']}", r["step_us"],
+             f"n={r['n']};regroups={r['regroups']};"
+             f"layout_host={r['layout_host']}")
+    return rows
+
+
+def record_dist_rows(rows: list[dict], json_path: str = EDGE_BENCH_JSON) -> None:
+    """Merge ``dist_kernel_mode`` rows into the edge-bench JSON.
+
+    Existing rows with the same (kind, source, d, n, dist_kernel_mode) key
+    are replaced; everything else (the single-device sweep rows, other
+    sources' dist rows) is preserved — ``table45_distributed`` and the
+    bench-smoke job both write here without clobbering each other.
+    """
+    if not rows:
+        return
+    data = _read_bench_json(json_path)
+    # the jnp row and the fused row are the two logical slots per
+    # (source, d, n): keying on the mode *string* would let a stale
+    # 'fallback' row survive next to a fresh 'interpret' one (legacy rows
+    # without use_kernel fall back to the mode heuristic)
+    key = lambda r: (r.get("kind"), r.get("source"), r.get("d"), r.get("n"),
+                     bool(r.get("use_kernel",
+                                r.get("dist_kernel_mode") != "jnp")))
+    fresh = {key(r) for r in rows}
+    data["rows"] = [r for r in data.get("rows", [])
+                    if key(r) not in fresh] + rows
+    with open(json_path, "w") as f:
+        json.dump(data, f, indent=2)
 
 
 def run(quick: bool = True):
@@ -167,13 +292,45 @@ def main(argv: list[str] | None = None) -> int:
                    help="exit 1 unless kernel_eligible at n=N (CI gate)")
     p.add_argument("--skip-virtual", action="store_true",
                    help="edge sweep only (the CI bench-smoke job)")
+    p.add_argument("--dist", type=int, default=None, metavar="D",
+                   help="also run the DistEGNN per-shard fused path on D "
+                        "forced host devices and record dist_kernel_mode rows")
+    p.add_argument("--gate-dist", action="store_true",
+                   help="exit 1 unless the --dist fused row dispatched to "
+                        "the kernel with zero trace-time regroups (CI gate)")
+    p.add_argument("--dist-only", action="store_true",
+                   help="skip the single-device sweeps entirely (the CI "
+                        "distributed job's dispatch gate)")
     args = p.parse_args(argv)
 
     sizes = (tuple(int(s) for s in args.sizes.split(","))
              if args.sizes else None)
-    if not args.skip_virtual:
+    if not args.skip_virtual and not args.dist_only:
         run(quick=sizes is not None)
-    rows = run_edge(quick=sizes is not None, json_path=args.json, sizes=sizes)
+    rows = ([] if args.dist_only else
+            run_edge(quick=sizes is not None, json_path=args.json, sizes=sizes))
+
+    if args.dist is not None:
+        dist_rows = run_dist(d=args.dist)
+        # same quick-mode policy as run_edge: never mutate the committed
+        # artifact unless this is a full sweep or --json names it explicitly
+        dist_json = args.json or (EDGE_BENCH_JSON if sizes is None else None)
+        if dist_json is not None:
+            record_dist_rows(dist_rows, dist_json)
+        if args.gate_dist:
+            fused = [r for r in dist_rows if r.get("use_kernel")]
+            ok = fused and all(r["dist_kernel_mode"] in ("interpret", "tpu")
+                               and r["regroups"] == 0 for r in fused)
+            if not ok:
+                print(f"GATE FAILED: per-shard fused path did not dispatch "
+                      f"cleanly: {dist_rows}")
+                return 1
+            print(f"GATE OK: per-shard fused path dispatched "
+                  f"(mode={fused[0]['dist_kernel_mode']}, regroups=0) at "
+                  f"D={args.dist}")
+    elif args.gate_dist:
+        print("GATE: --gate-dist requires --dist D")
+        return 1
 
     if args.gate_eligible is not None:
         gate = [r for r in rows if r["n"] == args.gate_eligible]

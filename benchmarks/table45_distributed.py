@@ -5,6 +5,12 @@ CPU container all 'devices' share one socket, so *wall-clock speedup is not
 meaningful*; we report the paper's mechanism numbers instead: per-device edge
 count / average degree under partitioning, per-device peak working set, MSE
 after a short training run, plus the measured per-step time for reference.
+
+Each device count also runs with ``use_kernel=True`` — the per-shard fused
+edge path (DESIGN.md §6.6) — and the resulting ``dist_kernel_mode`` rows
+(mode + dispatch-telemetry counts proving the host layout reached the
+kernel with zero trace-time regroups) are merged into
+``BENCH_edge_kernel.json`` via ``kernel_bench.record_dist_rows``.
 """
 from __future__ import annotations
 
@@ -16,9 +22,11 @@ import sys
 import textwrap
 
 from benchmarks.common import emit
+from benchmarks.kernel_bench import record_dist_rows
 
 _CHILD = """
 import json, time, jax, numpy as np
+from repro.core import message_passing as mp
 from repro.data.fluid import generate_fluid_dataset
 from repro.data.partition import partition_sample
 from repro.distributed.dist_egnn import (make_gnn_mesh, stack_partitions,
@@ -35,13 +43,16 @@ pgs_all = [[partition_sample(s.x0, s.v0, s.h, s.x1, d=D, r={r}, seed=j)
 batches = [stack_partitions(p) for p in pgs_all]
 edges = float(np.mean([b.edge_mask.sum() / D for b in batches]))
 deg = edges / (data[0].x0.shape[0] / D)
-cfg = FastEGNNConfig(n_layers=3, hidden=32, h_in=1, n_virtual=C, s_dim=32)
+cfg = FastEGNNConfig(n_layers=3, hidden=32, h_in=1, n_virtual=C, s_dim=32,
+                     use_kernel={use_kernel})
 params = init_fast_egnn(jax.random.PRNGKey(0), cfg)
 mesh = make_gnn_mesh(D)
 opt = Adam(lr=5e-4)
+mp.reset_dispatch_counts()
 step, loss_fn = build_dist_train_step(cfg, mesh, opt, lam_mmd=0.01)
 st = opt.init(params)
 step(params, st, batches[0])  # compile
+counts = mp.dispatch_counts()
 t0 = time.perf_counter()
 p = params
 for _ in range({epochs}):
@@ -56,32 +67,70 @@ apply_fn = build_dist_apply(cfg, mesh)
 xp, _ = apply_fn(p, vb)
 import jax.numpy as jnp
 err = jnp.sum(jnp.sum((xp - vb.x_target) ** 2, -1) * vb.node_mask) / jnp.sum(vb.node_mask) / 3
-work_set = sum(int(np.prod(a.shape[1:])) * 4 for a in batches[0]) // D
+# per-device working set (workset_dev_bytes — renamed from the old
+# workset_bytes, which double-divided by D): shape[1:] of the (D, B, ...)
+# arrays already excludes the sharded axis (n_cap/e_cap shrink ~1/D with
+# the partition), so no further /D.  lay_* fields excluded: they'd
+# inflate the metric vs pre-layout recordings, and the jnp rows never
+# read them
+work_set = sum(int(np.prod(a.shape[1:])) * 4
+               for f, a in zip(batches[0]._fields, batches[0])
+               if not f.startswith("lay_"))
+backend_mode = "tpu" if jax.default_backend() == "tpu" else "interpret"
+mode = mp.dispatch_mode(counts, {use_kernel}, backend_mode)
 print(json.dumps(dict(d=D, edges_per_dev=edges, avg_degree=deg,
-                      mse=float(err), step_s=t_step, workset_bytes=work_set)))
+                      mse=float(err), step_s=t_step, workset_dev_bytes=work_set,
+                      dist_kernel_mode=mode,
+                      regroups=counts.get("edge_layout_regroup", 0),
+                      layout_host=counts.get("edge_layout_host", 0))))
 """
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, record_bench: bool | None = None):
+    # quick runs don't touch the committed artifact (same policy as
+    # kernel_bench.run_edge) unless explicitly asked
+    if record_bench is None:
+        record_bench = not quick
     n_nodes = 240 if quick else 800
     n_samples = 12 if quick else 32
     epochs = 6 if quick else 20
     devices = [1, 2, 4] if quick else [1, 2, 3, 4, 8]
+    dist_rows = []
     for d in devices:
-        code = _CHILD.format(d=d, c=3, n_samples=n_samples, n_nodes=n_nodes,
-                             batch=4, r=0.05, epochs=epochs)
-        env = dict(os.environ)
-        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={d}"
-        env["PYTHONPATH"] = "src"
-        out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
-                             capture_output=True, text=True, env=env, cwd=".")
-        if out.returncode != 0:
-            emit(f"table45/dist_egnn_d{d}", 0.0, f"ERROR:{out.stderr[-200:]}")
-            continue
-        res = json.loads(out.stdout.strip().splitlines()[-1])
-        emit(f"table45/dist_egnn_d{d}", res["step_s"] * 1e6,
-             f"mse={res['mse']:.5f};edges_per_dev={res['edges_per_dev']:.0f};"
-             f"avg_degree={res['avg_degree']:.2f};workset_B={res['workset_bytes']}")
+        for use_kernel in (False, True):
+            code = _CHILD.format(d=d, c=3, n_samples=n_samples,
+                                 n_nodes=n_nodes, batch=4, r=0.05,
+                                 epochs=epochs, use_kernel=use_kernel)
+            env = dict(os.environ)
+            env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={d}"
+            env["PYTHONPATH"] = "src"
+            out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                                 capture_output=True, text=True, env=env, cwd=".")
+            tag = "_kernel" if use_kernel else ""
+            if out.returncode != 0:
+                emit(f"table45/dist_egnn_d{d}{tag}", 0.0,
+                     f"ERROR:{out.stderr[-200:]}")
+                # overwrite this slot's stale row too: a failed run must not
+                # leave the previous measurement looking current
+                dist_rows.append(dict(
+                    kind="dist_edge", source="table45", d=d, n=n_nodes,
+                    use_kernel=use_kernel, dist_kernel_mode="error",
+                    step_us=None, regroups=None, layout_host=None))
+                continue
+            res = json.loads(out.stdout.strip().splitlines()[-1])
+            emit(f"table45/dist_egnn_d{d}{tag}", res["step_s"] * 1e6,
+                 f"mse={res['mse']:.5f};edges_per_dev={res['edges_per_dev']:.0f};"
+                 f"avg_degree={res['avg_degree']:.2f};"
+                 f"workset_dev_B={res['workset_dev_bytes']};"
+                 f"dist_kernel_mode={res['dist_kernel_mode']}")
+            dist_rows.append(dict(
+                kind="dist_edge", source="table45", d=d, n=n_nodes,
+                use_kernel=use_kernel,
+                dist_kernel_mode=res["dist_kernel_mode"],
+                step_us=res["step_s"] * 1e6, regroups=res["regroups"],
+                layout_host=res["layout_host"]))
+    if record_bench:
+        record_dist_rows(dist_rows)
 
 
 if __name__ == "__main__":

@@ -130,6 +130,46 @@ def _scaled_rel(rel: Array, d2: Array, spec: EdgeSpec) -> Array:
     return rel
 
 
+# --------------------------------------------------------------- telemetry
+# Dispatch counters, incremented at *trace* time (dispatch is static).
+# Tests and the distributed benches assert the fused path actually
+# dispatched — and, when a host layout is supplied, that zero trace-time
+# regroups happened — instead of inferring it from the absence of errors.
+# Events: 'edge_kernel' / 'edge_jnp' (this module), 'edge_layout_host' /
+# 'edge_layout_regroup' (kernels.edge_message).  Because jit caches traces,
+# counts reflect *traces*, not executions: reset before building a fresh
+# jitted program to observe its dispatch decisions.
+DISPATCH_COUNTS: dict[str, int] = {}
+
+
+def record_dispatch(event: str) -> None:
+    DISPATCH_COUNTS[event] = DISPATCH_COUNTS.get(event, 0) + 1
+
+
+def reset_dispatch_counts() -> None:
+    DISPATCH_COUNTS.clear()
+
+
+def dispatch_counts() -> dict[str, int]:
+    return dict(DISPATCH_COUNTS)
+
+
+def dispatch_mode(counts: dict, use_kernel: bool, backend_mode: str) -> str:
+    """Classify a traced program's edge dispatch for bench rows.
+
+    The single home of the ``dist_kernel_mode`` semantics every bench
+    writer records into ``BENCH_edge_kernel.json``: ``'jnp'`` when the
+    kernel was never requested, ``backend_mode`` (``'tpu'`` /
+    ``'interpret'``) when the fused path dispatched with zero trace-time
+    regroups, ``'fallback'`` otherwise.
+    """
+    if not use_kernel:
+        return "jnp"
+    if counts.get("edge_kernel", 0) and not counts.get("edge_layout_regroup", 0):
+        return backend_mode
+    return "fallback"
+
+
 # Per-window VMEM budget of the banded-CSR tiling (DESIGN.md §3.2): the
 # kernel's working set is bounded by the window sizes, not by N, so
 # eligibility is a budget on the per-step VMEM footprint — constant in
@@ -189,19 +229,29 @@ def kernel_supported(lp: dict, g: GeometricGraph, spec: EdgeSpec) -> bool:
 
 
 def edge_pathway(lp: dict, h: Array, x: Array, g: GeometricGraph,
-                 spec: EdgeSpec, *, use_kernel: bool = False) -> EdgePathwayOut:
+                 spec: EdgeSpec, *, use_kernel: bool = False,
+                 layout=None) -> EdgePathwayOut:
     """The unified real-real edge pathway (Eq. 3 + real parts of Eqs. 6-7).
 
     ``lp`` holds ``"phi1"`` (the message MLP) and, when ``spec.gate ==
     'mlp'``, ``"gate"`` (the scalar coordinate head).  Returns the
     degree-normalised (or plain-sum) coordinate update ``dx`` and message
     aggregate ``mh``; ``dx`` is None for invariant-only specs.
+
+    ``layout`` optionally supplies a host-precomputed banded-CSR layout
+    (``kernels.edge_message.EdgeLayout``, built by
+    ``data.radius_graph.banded_csr_layout`` at the default band policy for
+    this graph's padded size) so the fused kernel skips its trace-time
+    regrouping — the DistEGNN per-shard path (DESIGN.md §6.6).  Ignored by
+    the jnp path and when the spec is not kernel-eligible.
     """
     if use_kernel and kernel_supported(lp, g, spec):
         from repro.kernels import ops as kops
 
-        dx, mh = kops.edge_pathway(lp, h, x, g, spec)
+        record_dispatch("edge_kernel")
+        dx, mh = kops.edge_pathway(lp, h, x, g, spec, layout=layout)
         return EdgePathwayOut(dx=dx if spec.gate != "none" else None, mh=mh)
+    record_dispatch("edge_jnp")
 
     rel, d2 = edge_rel_d2(x, g)
     msg = mlp(lp["phi1"], _phi1_features(h, d2, g, spec))  # (E, M)

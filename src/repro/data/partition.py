@@ -10,8 +10,10 @@ from typing import NamedTuple
 
 import numpy as np
 
-from repro.data.radius_graph import (drop_longest_edges, pad_edges, pad_nodes,
-                                     radius_graph, sort_edges_by_receiver)
+from repro.core.message_passing import EDGE_KERNEL_BLOCK_E
+from repro.data.radius_graph import (banded_csr_layout, drop_longest_edges,
+                                     pad_edges, pad_nodes, radius_graph,
+                                     sort_edges_by_receiver)
 
 
 def random_partition(rng: np.random.Generator, n: int, d: int) -> np.ndarray:
@@ -31,8 +33,17 @@ def metis_like_partition(x: np.ndarray, snd: np.ndarray, rcv: np.ndarray, d: int
     n = x.shape[0]
     cap = int(np.ceil(n / d))
     adj: list[list[int]] = [[] for _ in range(n)]
-    for s, r in zip(snd, rcv):
-        adj[s].append(int(r))
+    # undirected neighbourhood: a directed edge list (e.g. after per-receiver
+    # neighbour capping or drop-longest) would otherwise leave BFS growth
+    # blind to in-edges, stranding whole regions as "orphans".  Symmetrise
+    # + dedupe (radius_graph already emits both directions — naively
+    # appending reverses would double every adjacency list), sorted so the
+    # BFS claim order is deterministic.
+    if len(snd):
+        fwd = np.stack([snd, rcv], axis=1)
+        und = np.unique(np.concatenate([fwd, fwd[:, ::-1]]), axis=0)
+        for s, r in und:
+            adj[s].append(int(r))
     assign = np.full(n, -1, np.int64)
     # k-means++-style spread seeds
     seeds = [0]
@@ -79,6 +90,15 @@ class PartitionedGraph(NamedTuple):
 
     All leading dims are (D, cap_*): x/v/h/node_mask per shard; senders /
     receivers are *local* indices into the shard's node slots.
+
+    The ``lay_*`` fields carry each shard's host-precomputed banded-CSR
+    layout (``data.radius_graph.banded_csr_layout`` over the *padded* local
+    edge list at the default band policy for ``n_cap``): banded-order
+    endpoint copies, per-block window coordinates and per-receiver-window
+    CSR row offsets.  Every shard of a sample shares one band capacity (the
+    layout bound is a function of (n_cap, e_cap) only), so the stacked
+    arrays are rectangular by construction; ``stack_partitions`` re-pads
+    across samples when batch capacities differ (DESIGN.md §6.6).
     """
 
     x: np.ndarray  # (D, n_cap, 3)
@@ -89,22 +109,94 @@ class PartitionedGraph(NamedTuple):
     node_mask: np.ndarray  # (D, n_cap)
     edge_mask: np.ndarray  # (D, e_cap)
     x_target: np.ndarray  # (D, n_cap, 3)
+    lay_senders: np.ndarray  # (D, band_cap) banded-order global senders
+    lay_receivers: np.ndarray  # (D, band_cap)
+    lay_edge_mask: np.ndarray  # (D, band_cap)
+    lay_block_rwin: np.ndarray  # (D, band_cap // block_e)
+    lay_block_swin: np.ndarray  # (D, band_cap // block_e)
+    lay_window_offsets: np.ndarray  # (D, n_windows + 1)
+
+
+LAYOUT_FIELDS = ("lay_senders", "lay_receivers", "lay_edge_mask",
+                 "lay_block_rwin", "lay_block_swin", "lay_window_offsets")
+
+
+def shard_layout_fields(senders: np.ndarray, receivers: np.ndarray,
+                        edge_mask: np.ndarray, n_cap: int) -> dict:
+    """(D, e_cap) padded local edge arrays → stacked ``lay_*`` field dict.
+
+    The single home of the ``BandedCSR`` → ``PartitionedGraph`` field
+    packing — :func:`partition_sample` and batch re-padding
+    (:func:`repad_partition`) both go through it, so the field set changes
+    in one place.  Shards share (n_cap, e_cap), hence one band capacity.
+    """
+    out = {f: [] for f in LAYOUT_FIELDS}
+    for d in range(senders.shape[0]):
+        # block_e pinned to the kernel constant: the dist path stamps its
+        # LayoutMeta with EDGE_KERNEL_BLOCK_E, so building here at an
+        # independent default would trip the meta check if either drifted
+        lay = banded_csr_layout(senders[d], receivers[d], n_cap,
+                                edge_mask=edge_mask[d],
+                                block_e=EDGE_KERNEL_BLOCK_E)
+        out["lay_senders"].append(lay.senders)
+        out["lay_receivers"].append(lay.receivers)
+        out["lay_edge_mask"].append(lay.edge_mask)
+        out["lay_block_rwin"].append(lay.block_rwin)
+        out["lay_block_swin"].append(lay.block_swin)
+        out["lay_window_offsets"].append(lay.window_offsets)
+    return {f: np.stack(v) for f, v in out.items()}
+
+
+def repad_partition(pg: PartitionedGraph, n_cap: int,
+                    e_cap: int) -> PartitionedGraph:
+    """Re-pad one PartitionedGraph to larger capacities.
+
+    Node/edge arrays grow by zero-padding (masked slots); the banded
+    layouts are *rebuilt* — band geometry is a function of the padded
+    capacities, so the original layout is invalid at the new shapes.
+    """
+    def pad_to(a, cap):
+        width = [(0, 0), (0, cap - a.shape[1])] + [(0, 0)] * (a.ndim - 2)
+        return np.pad(a, width)
+
+    node = {f: pad_to(getattr(pg, f), n_cap)
+            for f in ("x", "v", "h", "x_target", "node_mask")}
+    edge = {f: pad_to(getattr(pg, f), e_cap)
+            for f in ("senders", "receivers", "edge_mask")}
+    lay = shard_layout_fields(edge["senders"], edge["receivers"],
+                              edge["edge_mask"], n_cap)
+    return pg._replace(**node, **edge, **lay)
 
 
 def dynamic_radius(x: np.ndarray, assign: np.ndarray, d: int, r0: float,
                    target_edges: int, step: float = 0.001, max_iter: int = 200) -> float:
-    """Table VII: grow the cutoff until Σ_d local edges ≈ single-device count."""
-    r = r0
-    for _ in range(max_iter):
-        total = 0
+    """Table VII: grow the cutoff until Σ_d local edges ≈ single-device count.
+
+    Bisection over the candidate grid ``r0 + k·step, k ≤ max_iter`` — the
+    local edge count is monotone in the radius, so this returns the same
+    radius as the old linear scan (smallest grid point reaching the target,
+    capped at ``r0 + max_iter·step``) in O(d·log max_iter) graph builds
+    instead of O(d·max_iter).
+    """
+    def total(r: float) -> int:
+        t = 0
         for p in range(d):
-            xs = x[assign == p]
-            s, _ = radius_graph(xs, r)
-            total += s.size
-        if total >= target_edges:
-            return r
-        r += step
-    return r
+            s, _ = radius_graph(x[assign == p], r)
+            t += s.size
+        return t
+
+    if total(r0) >= target_edges:
+        return r0
+    lo, hi = 0, max_iter  # grid indices into r0 + k·step
+    if total(r0 + hi * step) < target_edges:
+        return r0 + hi * step
+    while hi - lo > 1:
+        mid = (lo + hi) // 2
+        if total(r0 + mid * step) >= target_edges:
+            hi = mid
+        else:
+            lo = mid
+    return r0 + hi * step
 
 
 def partition_sample(
@@ -149,7 +241,8 @@ def partition_sample(
     if e_cap is None:
         e_cap = max(1, max(s[4].size for s in shards))
 
-    out = {k: [] for k in PartitionedGraph._fields}
+    out = {k: [] for k in PartitionedGraph._fields
+           if k not in LAYOUT_FIELDS}
     for xs, vs, hs, ts, snd, rcv in shards:
         xp, nm = pad_nodes(xs, n_cap)
         vp, _ = pad_nodes(vs, n_cap)
@@ -164,4 +257,10 @@ def partition_sample(
         out["receivers"].append(rp)
         out["node_mask"].append(nm)
         out["edge_mask"].append(em)
-    return PartitionedGraph(**{k: np.stack(vv) for k, vv in out.items()})
+    base = {k: np.stack(vv) for k, vv in out.items()}
+    # host-side banded layouts over the *padded* local edge lists — the
+    # same arrays the trace-time regroup would see, so the fused kernel
+    # can consume them verbatim
+    lay = shard_layout_fields(base["senders"], base["receivers"],
+                              base["edge_mask"], n_cap)
+    return PartitionedGraph(**base, **lay)

@@ -188,12 +188,19 @@ def banded_csr_layout(
     w_end = ends.reshape(nw, nsw)[:, -1]
     window_offsets = np.concatenate([[0], w_end]).astype(np.int32)
 
+    # max sender-index span inside any one edge block, vectorised (this
+    # runs per shard per sample in the partition pipeline — a Python loop
+    # over blocks would dominate the layout pass at scale)
     span = 0
-    for b in range(n_blocks):
-        sl = out_s[b * block_e : (b + 1) * block_e]
-        live = out_m[b * block_e : (b + 1) * block_e] > 0
-        if live.any():
-            span = max(span, int(sl[live].max()) - int(sl[live].min()) + 1)
+    live = out_m > 0
+    if live.any():
+        blk = np.nonzero(live)[0] // block_e
+        mn = np.full(n_blocks, np.iinfo(np.int64).max)
+        mx = np.full(n_blocks, -1)
+        np.minimum.at(mn, blk, out_s[live])
+        np.maximum.at(mx, blk, out_s[live])
+        nz = mx >= 0
+        span = int((mx[nz] - mn[nz] + 1).max())
 
     return BandedCSR(
         senders=out_s, receivers=out_r, edge_mask=out_m,

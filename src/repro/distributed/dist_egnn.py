@@ -8,9 +8,16 @@ every layer (Eqs. 16–17 — implemented by ``fast_egnn_apply(axis_name=...)``)
 Gradient flow through the collective is automatic: ``jax.grad`` of a
 ``shard_map``-ed program produces the psum-of-cotangents backward rule that
 the paper implements by hand for torch.distributed (DESIGN.md §6.1).
+
+With ``cfg.use_kernel`` each shard's local edge pathway runs the banded
+Pallas kernel, fed by the host-precomputed layouts that ``ShardedBatch``
+carries alongside the edge arrays (zero trace-time regrouping —
+DESIGN.md §6.6); shards failing the spec/VMEM eligibility check fall back
+to the identical-math jnp path.
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import NamedTuple, Optional
 
@@ -20,7 +27,10 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.graph import GeometricGraph
+from repro.core.message_passing import EDGE_KERNEL_BLOCK_E
 from repro.core.mmd import mmd_loss
+from repro.data.partition import repad_partition
+from repro.kernels.edge_message import EdgeLayout, LayoutMeta, pick_windows
 from repro.models.fast_egnn import FastEGNNConfig, fast_egnn_apply
 from repro.training.losses import masked_mse
 from repro.training.optim import Adam
@@ -61,7 +71,10 @@ class ShardedBatch(NamedTuple):
     """Batched, partitioned graph.  Leading dims (D, B, ...) — D is sharded.
 
     x/v/h/x_target: (D, B, n_cap, ·); senders/receivers/edge_mask: (D, B, e_cap);
-    node_mask: (D, B, n_cap).
+    node_mask: (D, B, n_cap).  The ``lay_*`` fields mirror
+    ``PartitionedGraph``'s host-precomputed banded layouts (D, B, ·): they
+    ride the same ``graph``-axis sharding so each shard's fused edge kernel
+    reads its own layout with zero trace-time regrouping (DESIGN.md §6.6).
     """
 
     x: Array
@@ -72,33 +85,52 @@ class ShardedBatch(NamedTuple):
     node_mask: Array
     edge_mask: Array
     x_target: Array
+    lay_senders: Array
+    lay_receivers: Array
+    lay_edge_mask: Array
+    lay_block_rwin: Array
+    lay_block_swin: Array
+
+
+# warn-once latch for stack_partitions re-padding (module-level: the
+# pathology is a dataset property, repeating it per batch is noise)
+_REPAD_WARNED = False
 
 
 def stack_partitions(pgs) -> ShardedBatch:
     """list[PartitionedGraph] (one per batch element, each (D, ...)) → ShardedBatch.
 
     Per-sample node/edge capacities may differ — re-pad to the batch max so
-    the stacked arrays are rectangular.
+    the stacked arrays are rectangular (host-precomputed banded layouts are
+    rebuilt at the new capacities — ``data.partition.repad_partition``).
+    Inflating a sample's capacity by more than 2× warns (once): that much
+    padding usually means one outlier sample is dictating the whole batch's
+    shapes — and compute.  ``lay_window_offsets`` is a host-side diagnostic
+    and deliberately *not* a ShardedBatch field — the kernel never reads
+    it, so it would be dead payload on the graph axis.
     """
+    global _REPAD_WARNED
     n_cap = max(p.x.shape[1] for p in pgs)
     e_cap = max(p.senders.shape[1] for p in pgs)
 
-    def pad_to(a, cap):
-        width = [(0, 0), (0, cap - a.shape[1])] + [(0, 0)] * (a.ndim - 2)
-        return np.pad(a, width)
+    stacked = []
+    for p in pgs:
+        n0, e0 = p.x.shape[1], p.senders.shape[1]
+        if (n0, e0) == (n_cap, e_cap):
+            stacked.append(p)
+            continue
+        if not _REPAD_WARNED and (n_cap > 2 * n0 or e_cap > 2 * e0):
+            _REPAD_WARNED = True
+            warnings.warn(
+                f"stack_partitions: re-padding a sample from (n_cap={n0}, "
+                f"e_cap={e0}) to the batch max (n_cap={n_cap}, e_cap={e_cap}) "
+                f"— >2× inflation; one outlier sample is dictating the "
+                f"batch's padded shapes (warned once)", stacklevel=2)
+        stacked.append(repad_partition(p, n_cap, e_cap))
 
-    def s(field):
-        caps = {"x": n_cap, "v": n_cap, "h": n_cap, "x_target": n_cap,
-                "node_mask": n_cap, "senders": e_cap, "receivers": e_cap,
-                "edge_mask": e_cap}
-        return jnp.asarray(np.stack([pad_to(getattr(p, field), caps[field]) for p in pgs], axis=1))
-
-    return ShardedBatch(
-        x=s("x"), v=s("v"), h=s("h"),
-        senders=s("senders"), receivers=s("receivers"),
-        node_mask=s("node_mask"), edge_mask=s("edge_mask"),
-        x_target=s("x_target"),
-    )
+    return ShardedBatch(**{
+        f: jnp.asarray(np.stack([getattr(p, f) for p in stacked], axis=1))
+        for f in ShardedBatch._fields})
 
 
 def _local_graph(sb: ShardedBatch) -> GeometricGraph:
@@ -112,10 +144,29 @@ def _local_graph(sb: ShardedBatch) -> GeometricGraph:
     )
 
 
+def _edge_layout(sb: ShardedBatch) -> EdgeLayout:
+    """This shard's host layout as kernel operands (no leading dims).
+
+    The static band geometry is re-derived from the padded node capacity —
+    the same derivation ``partition_sample`` used — so the kernel's meta
+    check confirms layout and graph agree.
+    """
+    window, swindow, n_pad = pick_windows(sb.x.shape[-2])
+    return EdgeLayout(
+        senders=sb.lay_senders, receivers=sb.lay_receivers,
+        edge_mask=sb.lay_edge_mask, block_rwin=sb.lay_block_rwin,
+        block_swin=sb.lay_block_swin,
+        meta=LayoutMeta(window, swindow, n_pad, EDGE_KERNEL_BLOCK_E))
+
+
 def build_dist_apply(cfg: FastEGNNConfig, mesh: Mesh):
     """Jitted distributed forward: (params, ShardedBatch) → x_pred (D,B,n_cap,3).
 
-    Params replicated; batch sharded on the graph axis.
+    Params replicated; batch sharded on the graph axis.  With
+    ``cfg.use_kernel`` each shard's local edge pathway runs the banded
+    Pallas kernel, consuming the batch's host-precomputed layout (zero
+    trace-time regrouping); shards whose spec/VMEM budget fails the
+    eligibility check fall back to the identical-math jnp path.
     """
     specs = ShardedBatch(*([P(GRAPH_AXIS)] * len(ShardedBatch._fields)))
 
@@ -124,7 +175,9 @@ def build_dist_apply(cfg: FastEGNNConfig, mesh: Mesh):
 
         def one(sbe):
             g = _local_graph(sbe)
-            x, h, vs = fast_egnn_apply(params, cfg, g, axis_name=GRAPH_AXIS)
+            lay = _edge_layout(sbe) if cfg.use_kernel else None
+            x, h, vs = fast_egnn_apply(params, cfg, g, axis_name=GRAPH_AXIS,
+                                       edge_layout=lay)
             return x, vs
 
         x, vs = jax.vmap(one)(sb)
@@ -153,7 +206,9 @@ def build_dist_train_step(cfg: FastEGNNConfig, mesh: Mesh, opt: Adam,
 
         def one(sbe):
             g = _local_graph(sbe)
-            x, h, vs = fast_egnn_apply(params, cfg, g, axis_name=GRAPH_AXIS)
+            lay = _edge_layout(sbe) if cfg.use_kernel else None
+            x, h, vs = fast_egnn_apply(params, cfg, g, axis_name=GRAPH_AXIS,
+                                       edge_layout=lay)
             mse = masked_mse(x, sbe.x_target, g.node_mask, axis_name=GRAPH_AXIS)
             mmd = mmd_loss(vs.z, sbe.x_target, g.node_mask, sigma=mmd_sigma)
             return mse, mmd

@@ -58,6 +58,7 @@ from __future__ import annotations
 
 import functools
 import math
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -65,6 +66,62 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 Array = jax.Array
+
+
+class LayoutMeta(NamedTuple):
+    """Static band geometry an :class:`EdgeLayout` was built at."""
+
+    window: int
+    swindow: int
+    n_pad: int
+    block_e: int
+
+
+@jax.tree_util.register_pytree_node_class
+class EdgeLayout:
+    """Host-precomputed banded-CSR layout, as kernel operands (DESIGN.md §6.6).
+
+    The array twin of ``data.radius_graph.BandedCSR``: endpoint indices are
+    *global* (the kernel localises them with a cheap elementwise ``%`` —
+    no trace-time argsort/scatter).  Registered pytree: the five arrays are
+    children, so a layout batches/shards through ``jit`` / ``jax.vmap`` /
+    ``shard_map`` like any other operand; ``meta`` — the static band
+    geometry it was built at — rides along as aux data, letting the fused
+    kernel verify it against its own :func:`pick_windows` derivation and
+    fail loudly on a layout built for a different graph size or ``block_e``
+    (``meta=None`` skips that check — capacity alignment is still
+    enforced).
+    """
+
+    __slots__ = ("senders", "receivers", "edge_mask", "block_rwin",
+                 "block_swin", "meta")
+
+    def __init__(self, senders, receivers, edge_mask, block_rwin,
+                 block_swin, meta: LayoutMeta | None = None):
+        self.senders = senders  # (cap,) int32, banded order, masked slots = 0
+        self.receivers = receivers  # (cap,)
+        self.edge_mask = edge_mask  # (cap,)
+        self.block_rwin = block_rwin  # (cap // block_e,) receiver-window/block
+        self.block_swin = block_swin  # (cap // block_e,) sender-window/block
+        self.meta = None if meta is None else LayoutMeta(*meta)
+
+    def tree_flatten(self):
+        return ((self.senders, self.receivers, self.edge_mask,
+                 self.block_rwin, self.block_swin), self.meta)
+
+    @classmethod
+    def tree_unflatten(cls, meta, children):
+        return cls(*children, meta=meta)
+
+
+def layout_from_host(bcsr) -> EdgeLayout:
+    """``data.radius_graph.BandedCSR`` (numpy) → kernel operand arrays."""
+    return EdgeLayout(
+        senders=jnp.asarray(bcsr.senders), receivers=jnp.asarray(bcsr.receivers),
+        edge_mask=jnp.asarray(bcsr.edge_mask),
+        block_rwin=jnp.asarray(bcsr.block_rwin),
+        block_swin=jnp.asarray(bcsr.block_swin),
+        meta=LayoutMeta(bcsr.window, bcsr.swindow, bcsr.n_pad, bcsr.block_e))
 
 LANE = 128  # TPU lane width: one-hot minor dims should be multiples of this
 DEFAULT_WINDOW = 512  # receiver-window rows (scatter band)
@@ -244,7 +301,7 @@ def edge_pathway_fused(
     *, gate_mode: str = "mlp", rel_mode: str = "raw",
     clamp: float = math.inf, block_e: int = 128,
     window: int | None = None, swindow: int | None = None,
-    interpret: bool = True,
+    interpret: bool = True, layout: EdgeLayout | None = None,
 ):
     """See ``repro.kernels.ref.edge_pathway_ref`` for the exact contract.
 
@@ -256,6 +313,12 @@ def edge_pathway_fused(
     (tests sweep them); the banded regrouping runs at trace time, so any
     edge order and any sender distribution are handled — receiver sorting
     only improves band fill, never correctness.
+
+    ``layout`` supplies a host-precomputed :class:`EdgeLayout` (built by
+    ``data.radius_graph.banded_csr_layout`` for the *same* N, band policy
+    and ``block_e``): the trace-time regrouping is skipped entirely and
+    ``snd``/``rcv``/``em`` are ignored by the forward (they remain the
+    backward oracle's edge list in ``ops.edge_pathway``).
     """
     n = x.shape[0]
     m = w2.shape[1]
@@ -263,10 +326,38 @@ def edge_pathway_fused(
     if e == 0:  # empty graph: nothing to reduce (edge-drop p=1.0 story)
         return (jnp.zeros((n, 3), x.dtype), jnp.zeros((n, m), x.dtype),
                 jnp.zeros((n, 1), x.dtype))
+    from repro.core.message_passing import record_dispatch
+
     window, swindow, n_pad = pick_windows(n, window=window, swindow=swindow)
-    snd_loc, rcv_loc, em_b, block_rwin, block_swin, n_blocks = banded_layout(
-        snd, rcv, em, n_pad=n_pad, window=window, swindow=swindow,
-        block_e=block_e)
+    if layout is not None:
+        meta = getattr(layout, "meta", None)
+        if meta is not None and meta != LayoutMeta(window, swindow, n_pad,
+                                                  block_e):
+            raise ValueError(
+                f"EdgeLayout was built at band geometry {meta}, but this "
+                f"call derives LayoutMeta(window={window}, swindow={swindow}, "
+                f"n_pad={n_pad}, block_e={block_e}) from the graph's padded "
+                f"node count — rebuild the layout for this graph")
+        cap = layout.senders.shape[0]
+        if cap % block_e or layout.block_rwin.shape[0] * block_e != cap:
+            raise ValueError(
+                f"EdgeLayout capacity {cap} inconsistent with block_e="
+                f"{block_e} × {layout.block_rwin.shape[0]} blocks — was the "
+                f"layout built with a different block size?")
+        record_dispatch("edge_layout_host")
+        n_blocks = cap // block_e
+        # localise global endpoints to their windows: elementwise, no
+        # argsort/scatter — this is NOT a regroup
+        snd_loc = layout.senders.astype(jnp.int32) % swindow
+        rcv_loc = layout.receivers.astype(jnp.int32) % window
+        em_b = layout.edge_mask
+        block_rwin = layout.block_rwin.astype(jnp.int32)
+        block_swin = layout.block_swin.astype(jnp.int32)
+    else:
+        record_dispatch("edge_layout_regroup")
+        snd_loc, rcv_loc, em_b, block_rwin, block_swin, n_blocks = banded_layout(
+            snd, rcv, em, n_pad=n_pad, window=window, swindow=swindow,
+            block_e=block_e)
     if n_pad != n:
         pad = n_pad - n
         x = jnp.pad(x, ((0, pad), (0, 0)))

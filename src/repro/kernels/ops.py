@@ -29,28 +29,46 @@ def _interpret() -> bool:
 
 # ------------------------------------------------------------------- edge MP
 @functools.lru_cache(maxsize=None)
-def _edge_custom(gate_mode: str, rel_mode: str, clamp: float):
+def _edge_custom(gate_mode: str, rel_mode: str, clamp: float,
+                 with_layout: bool = False):
     """Per-variant custom_vjp wrapper (cached so jit caches stay warm).
 
     Forward: fused Pallas kernel — banded-CSR tiled, so any graph size the
     VMEM-budget check admits dispatches here; the banded regrouping runs
-    inside the fused forward at trace time.  Backward: rematerialise
-    through the pure-jnp oracle on the *original* (un-regrouped) edge
-    list (flash-style recompute — no (E, hidden) residuals).  Integer
-    edge indices get float0 cotangents.
+    inside the fused forward at trace time, or is skipped entirely when
+    ``with_layout`` threads a host-precomputed ``EdgeLayout`` through as an
+    extra (non-differentiable) operand.  Backward: rematerialise through
+    the pure-jnp oracle on the *original* (un-regrouped) edge list
+    (flash-style recompute — no (E, hidden) residuals).  Integer edge
+    indices get float0 cotangents; the layout — a host-built *copy* of the
+    edge data, never something gradients are asked for — gets zeros.
     """
 
-    @jax.custom_vjp
-    def f(x, h, snd, rcv, em, *ws):
-        return edge_pathway_fused(x, h, snd, rcv, em, *ws,
-                                  gate_mode=gate_mode, rel_mode=rel_mode,
-                                  clamp=clamp, interpret=_interpret())
+    if with_layout:
+
+        @jax.custom_vjp
+        def f(x, h, snd, rcv, em, lay, *ws):
+            return edge_pathway_fused(x, h, snd, rcv, em, *ws,
+                                      gate_mode=gate_mode, rel_mode=rel_mode,
+                                      clamp=clamp, interpret=_interpret(),
+                                      layout=lay)
+
+    else:
+
+        @jax.custom_vjp
+        def f(x, h, snd, rcv, em, *ws):
+            return edge_pathway_fused(x, h, snd, rcv, em, *ws,
+                                      gate_mode=gate_mode, rel_mode=rel_mode,
+                                      clamp=clamp, interpret=_interpret())
 
     def fwd(*args):
         return f(*args), args
 
     def bwd(res, cots):
-        x, h, snd, rcv, em, *ws = res
+        if with_layout:
+            x, h, snd, rcv, em, lay, *ws = res
+        else:
+            x, h, snd, rcv, em, *ws = res
         _, vjp = jax.vjp(
             lambda x, h, em, *ws: ref.edge_pathway_ref(
                 x, h, snd, rcv, em, *ws,
@@ -58,6 +76,12 @@ def _edge_custom(gate_mode: str, rel_mode: str, clamp: float):
             x, h, em, *ws)
         gx, gh, gem, *gws = vjp(cots)
         zint = lambda a: np.zeros(a.shape, dtype=float0)
+        if with_layout:
+            glay = type(lay)(zint(lay.senders), zint(lay.receivers),
+                             jnp.zeros_like(lay.edge_mask),
+                             zint(lay.block_rwin), zint(lay.block_swin),
+                             meta=lay.meta)
+            return (gx, gh, zint(snd), zint(rcv), gem, glay, *gws)
         return (gx, gh, zint(snd), zint(rcv), gem, *gws)
 
     f.defvjp(fwd, bwd)
@@ -99,17 +123,27 @@ def unpack_edge_params(lp, h: Array, spec) -> tuple[Array, tuple[Array, ...]]:
     return hk, (w1r, w1s, w1d, b1[None, :], w2, b2, wg1, bg1, wg2)
 
 
-def edge_pathway(lp, h: Array, x: Array, g, spec) -> tuple[Array, Array]:
+def edge_pathway(lp, h: Array, x: Array, g, spec,
+                 layout=None) -> tuple[Array, Array]:
     """Kernel-backed replacement for the jnp edge pathway.
 
     Returns (dx (N,3), mh (N,M)); eligibility is checked by the caller
     (``core.message_passing.kernel_supported`` — a per-window VMEM budget,
     constant in graph size, so Water-3D 8K and Fluid113K-scale graphs
     dispatch here rather than falling back to jnp).
+
+    ``layout`` threads a host-precomputed ``EdgeLayout`` into the fused
+    forward (zero trace-time regrouping); the original edge list stays the
+    backward oracle's input either way.
     """
     hk, ws = unpack_edge_params(lp, h, spec)
-    f = _edge_custom(spec.gate, spec.rel, float(spec.coord_clamp))
-    dx, mh, _deg = f(x, hk, g.senders, g.receivers, g.edge_mask, *ws)
+    if layout is not None:
+        f = _edge_custom(spec.gate, spec.rel, float(spec.coord_clamp), True)
+        dx, mh, _deg = f(x, hk, g.senders, g.receivers, g.edge_mask,
+                         layout, *ws)
+    else:
+        f = _edge_custom(spec.gate, spec.rel, float(spec.coord_clamp))
+        dx, mh, _deg = f(x, hk, g.senders, g.receivers, g.edge_mask, *ws)
     return dx, mh
 
 

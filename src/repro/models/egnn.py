@@ -60,10 +60,16 @@ def init_egnn(key, cfg: EGNNConfig):
 
 
 def real_real_pathway(lp, h: Array, x: Array, g: GeometricGraph,
-                      coord_clamp: float, use_kernel: bool = False):
-    """Eq. 3 messages + real-real parts of Eqs. 6-7 with α_i = 1/|N(i)|."""
+                      coord_clamp: float, use_kernel: bool = False,
+                      edge_layout=None):
+    """Eq. 3 messages + real-real parts of Eqs. 6-7 with α_i = 1/|N(i)|.
+
+    ``edge_layout`` optionally carries the host-precomputed banded layout
+    (``kernels.edge_message.EdgeLayout``) into the fused kernel — the
+    DistEGNN per-shard path (DESIGN.md §6.6)."""
     return edge_pathway({"phi1": lp["phi1"], "gate": lp["phi_xr"]}, h, x, g,
-                        edge_spec(coord_clamp), use_kernel=use_kernel)
+                        edge_spec(coord_clamp), use_kernel=use_kernel,
+                        layout=edge_layout)
 
 
 def egnn_apply(params, cfg: EGNNConfig, g: GeometricGraph) -> tuple[Array, Array]:

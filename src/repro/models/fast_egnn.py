@@ -108,11 +108,16 @@ def fast_egnn_apply(
     g: GeometricGraph,
     *,
     axis_name: Optional[str] = None,
+    edge_layout=None,
 ) -> tuple[Array, Array, VirtualState]:
     """Returns (coords (N,3), feats (N,hidden), final virtual state).
 
     ``axis_name`` ⇒ DistEGNN: node reductions become psums over that mesh
-    axis (the caller must be inside shard_map over it).
+    axis (the caller must be inside shard_map over it).  ``edge_layout``
+    (``kernels.edge_message.EdgeLayout``) is this shard's host-precomputed
+    banded layout for the real-real pathway: with ``cfg.use_kernel`` the
+    fused kernel consumes it directly instead of regrouping at trace time
+    (DESIGN.md §6.6); ignored on the jnp path.
     """
     h = mlp(params["embed"], g.h)
     x = g.x
@@ -125,7 +130,8 @@ def fast_egnn_apply(
         dx_v, mh_v, dz_sum, ms_sum = _virtual_pathway(
             lp["virtual"], h, x, vs, mv, g.node_mask, cfg)  # Eq. 5
         dx_r, mh_r = real_real_pathway(lp, h, x, g, cfg.coord_clamp,
-                                       cfg.use_kernel)  # Eqs. 3, 6-7
+                                       cfg.use_kernel,
+                                       edge_layout=edge_layout)  # Eqs. 3, 6-7
         # clamp the virtual term like the real-real term (official EGNN
         # practice): an unbounded gate feeds the |x|→|d²| runaway loop.
         # Norm rescale, not componentwise clip — the clip box is

@@ -114,6 +114,108 @@ def test_kernel_eligible_at_paper_scales(n):
         == mp.edge_kernel_vmem_bytes(10 * n, hid, hid, hid)
 
 
+def test_edge_pathway_precomputed_layout_matches_regroup():
+    """A host-built EdgeLayout threaded through edge_pathway produces the
+    same fwd/grad as the trace-time regroup path — and the dispatch
+    telemetry shows zero regroups (the DESIGN.md §6.6 contract)."""
+    from repro.kernels.edge_message import layout_from_host
+
+    n, e, hid = 612, 2391, 32
+    snd, rcv, em = _random_edges(n, e, seed=7)
+    lay = layout_from_host(banded_csr_layout(snd, rcv, n, edge_mask=em))
+    ks = jax.random.split(jax.random.PRNGKey(9), 4)
+    x = jax.random.normal(ks[0], (n, 3))
+    h = jax.random.normal(ks[1], (n, hid))
+    g = make_graph(x, None, h, snd, rcv, edge_mask=em)
+    lp = {"phi1": init_mlp(ks[2], [2 * hid + 1, hid, hid]),
+          "gate": init_mlp(ks[3], [hid, hid, 1], final_bias=False)}
+    spec = mp.EdgeSpec(coord_clamp=100.0)
+
+    mp.reset_dispatch_counts()
+    want = jax.jit(lambda lp, h, x: mp.edge_pathway(
+        lp, h, x, g, spec, use_kernel=True))(lp, h, x)
+    got = jax.jit(lambda lp, h, x: mp.edge_pathway(
+        lp, h, x, g, spec, use_kernel=True, layout=lay))(lp, h, x)
+    counts = mp.dispatch_counts()
+    assert counts.get("edge_layout_host", 0) == 1, counts
+    assert counts.get("edge_layout_regroup", 0) == 1, counts  # the want path
+    np.testing.assert_allclose(np.asarray(got.dx), np.asarray(want.dx),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got.mh), np.asarray(want.mh),
+                               atol=1e-5)
+
+    def loss(kw):
+        def f(lp, x, h):
+            o = mp.edge_pathway(lp, h, x, g, spec, **kw)
+            return jnp.sum(o.dx * 0.3) + jnp.sum(o.mh * 0.1)
+        return f
+
+    g_re = jax.grad(loss(dict(use_kernel=True)), argnums=(0, 1, 2))(lp, x, h)
+    g_ly = jax.grad(loss(dict(use_kernel=True, layout=lay)),
+                    argnums=(0, 1, 2))(lp, x, h)
+    err = jax.tree.reduce(max, jax.tree.map(
+        lambda a, b: float(jnp.abs(a - b).max()), g_re, g_ly))
+    assert err < 1e-5, err
+
+
+def test_edge_pathway_precomputed_layout_vmap_batch():
+    """Per-batch-element host layouts under vmap — the DistEGNN usage
+    pattern (each shard × batch element carries its own layout arrays)."""
+    from repro.kernels.edge_message import layout_from_host
+
+    n, e, hid, B = 260, 700, 16, 3
+    rng = np.random.default_rng(3)
+    snds, rcvs, lays = [], [], []
+    for _ in range(B):
+        s, r, _ = _random_edges(n, e, seed=int(rng.integers(1 << 30)),
+                                masked=False)
+        snds.append(s)
+        rcvs.append(r)
+        lays.append(layout_from_host(banded_csr_layout(s, r, n)))
+    snds, rcvs = jnp.asarray(np.stack(snds)), jnp.asarray(np.stack(rcvs))
+    lay_b = jax.tree.map(lambda *a: jnp.stack(a), *lays)
+    em = jnp.ones((B, e))
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    xb = jax.random.normal(ks[0], (B, n, 3))
+    hb = jax.random.normal(ks[1], (B, n, hid))
+    lp = {"phi1": init_mlp(ks[2], [2 * hid + 1, hid, hid]),
+          "gate": init_mlp(ks[3], [hid, hid, 1], final_bias=False)}
+    spec = mp.EdgeSpec(coord_clamp=100.0)
+
+    def one_k(x, h, s, r, m, lay):
+        g = make_graph(x, None, h, s, r, edge_mask=m)
+        return mp.edge_pathway(lp, h, x, g, spec, use_kernel=True,
+                               layout=lay).dx
+
+    def one_j(x, h, s, r, m):
+        g = make_graph(x, None, h, s, r, edge_mask=m)
+        return mp.edge_pathway(lp, h, x, g, spec).dx
+
+    dk = jax.jit(jax.vmap(one_k))(xb, hb, snds, rcvs, em, lay_b)
+    dj = jax.jit(jax.vmap(one_j))(xb, hb, snds, rcvs, em)
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dj), atol=1e-5)
+
+
+def test_precomputed_layout_rejects_wrong_block_size():
+    """A layout built at a different block_e must fail loudly, not silently
+    mis-tile."""
+    from repro.kernels.edge_message import edge_pathway_fused, layout_from_host
+
+    n, e, hid = 200, 500, 8
+    snd, rcv, em = _random_edges(n, e, seed=1, masked=False)
+    lay = layout_from_host(banded_csr_layout(snd, rcv, n, block_e=64))
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(ks[0], (n, 3))
+    h = jax.random.normal(ks[1], (n, hid))
+    z = jnp.zeros
+    with pytest.raises(ValueError, match="block size|block_e"):
+        edge_pathway_fused(
+            x, h, jnp.asarray(snd), jnp.asarray(rcv), jnp.asarray(em),
+            z((hid, hid)), z((hid, hid)), z((1, hid)), z((1, hid)),
+            z((hid, hid)), z((1, hid)), z((hid, hid)), z((1, hid)),
+            z((hid, 1)), layout=lay)
+
+
 def test_kernel_ineligible_when_budget_exceeded():
     """Unusually wide hidden dims still fall back to jnp."""
     spec = mp.EdgeSpec(coord_clamp=100.0)

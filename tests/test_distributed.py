@@ -49,6 +49,57 @@ def test_metis_like_partition_prefers_locality():
     assert counts.max() <= int(np.ceil(300 / 4)) + 1
 
 
+def test_metis_like_partition_sees_undirected_neighbourhood():
+    """Adjacency now includes reverse edges: a *directed half* edge list
+    (only s<r kept — the shape a per-receiver neighbour cap produces) must
+    partition as well as the full symmetric list, deterministically."""
+    data = generate_fluid_dataset(1, n_particles=300)[0]
+    snd, rcv = radius_graph(data.x0, 0.05)
+    half = snd < rcv
+    am = metis_like_partition(data.x0, snd[half], rcv[half], 4)
+    # quality measured on the full symmetric edge set
+    internal = float(np.mean(am[snd] == am[rcv]))
+    assert internal > 0.6, internal  # forward-only BFS strands ~half (≈0.48)
+    counts = np.bincount(am, minlength=4)
+    assert counts.max() <= int(np.ceil(300 / 4)) + 1
+    # deterministic: pure function of (x, edges, d)
+    np.testing.assert_array_equal(
+        am, metis_like_partition(data.x0, snd[half], rcv[half], 4))
+
+
+def test_dynamic_radius_bisection_build_count():
+    """Bisection over candidate radii: ≤ ~20 shard-graph builds (the old
+    linear scan did O(d·iterations)), same return contract."""
+    from repro.data import partition as pmod
+
+    data = generate_fluid_dataset(1, n_particles=250)[0]
+    r0 = 0.035
+    snd, _ = radius_graph(data.x0, r0)
+    target = snd.size
+    assign = random_partition(np.random.default_rng(0), 250, 2)
+
+    calls = {"n": 0}
+    real_rg = pmod.radius_graph
+
+    def counting_rg(*a, **kw):
+        calls["n"] += 1
+        return real_rg(*a, **kw)
+
+    pmod.radius_graph = counting_rg
+    try:
+        r_dyn = pmod.dynamic_radius(data.x0, assign, 2, r0, target, step=0.002)
+    finally:
+        pmod.radius_graph = real_rg
+    assert calls["n"] <= 22, calls  # d·(2 bracket + ⌈log2 200⌉ bisect) = 20
+    assert r_dyn > r0
+    total = sum(real_rg(data.x0[assign == p], r_dyn)[0].size for p in range(2))
+    assert total >= target
+    # minimality on the step grid: one step tighter must miss the target
+    total_lo = sum(real_rg(data.x0[assign == p], r_dyn - 0.002)[0].size
+                   for p in range(2))
+    assert total_lo < target
+
+
 def test_partition_sample_shapes():
     data = generate_fluid_dataset(1, n_particles=200)[0]
     pg = partition_sample(data.x0, data.v0, data.h, data.x1, d=4, r=0.05)
@@ -56,6 +107,64 @@ def test_partition_sample_shapes():
     assert pg.node_mask.sum() == 200
     # local indices stay within shard capacity
     assert int(pg.senders.max()) < pg.x.shape[1]
+
+
+def test_partition_sample_carries_banded_layouts():
+    """Per-shard host layouts are first-class PartitionedGraph fields:
+    block-aligned capacity, conserved live edges, windows covering n_cap."""
+    from repro.kernels.edge_message import pick_windows
+
+    data = generate_fluid_dataset(1, n_particles=200)[0]
+    pg = partition_sample(data.x0, data.v0, data.h, data.x1, d=4, r=0.05)
+    d, cap = pg.lay_senders.shape
+    assert cap % 128 == 0 and pg.lay_block_rwin.shape == (d, cap // 128)
+    window, swindow, n_pad = pick_windows(pg.x.shape[1])
+    assert pg.lay_window_offsets.shape == (d, n_pad // window + 1)
+    for p in range(d):
+        # every real edge survives the regrouping, none duplicated
+        assert pg.lay_edge_mask[p].sum() == pg.edge_mask[p].sum()
+        assert (np.diff(pg.lay_window_offsets[p]) >= 0).all()
+
+
+def test_stack_partitions_repad_rebuilds_layouts_and_warns_once():
+    """Mixed-capacity batches: node/edge arrays re-pad to the batch max,
+    banded layouts are rebuilt at the new shapes, and >2× inflation warns
+    exactly once."""
+    import warnings as _w
+
+    from repro.distributed import dist_egnn
+
+    data_small = generate_fluid_dataset(1, n_particles=60)[0]
+    data_big = generate_fluid_dataset(1, n_particles=200, seed=1)[0]
+    pg_s = partition_sample(data_small.x0, data_small.v0, data_small.h,
+                            data_small.x1, d=2, r=0.05)
+    pg_b = partition_sample(data_big.x0, data_big.v0, data_big.h,
+                            data_big.x1, d=2, r=0.05)
+    assert pg_b.x.shape[1] > 2 * pg_s.x.shape[1]
+
+    dist_egnn._REPAD_WARNED = False
+    with pytest.warns(UserWarning, match="2× inflation"):
+        sb = dist_egnn.stack_partitions([pg_s, pg_b])
+    with _w.catch_warnings(record=True) as rec:
+        _w.simplefilter("always")  # second call: latched, no warning
+        dist_egnn.stack_partitions([pg_s, pg_b])
+    assert not [w for w in rec if "inflation" in str(w.message)]
+    dist_egnn._REPAD_WARNED = False
+
+    # rebuilt layout matches a fresh host layout at the padded capacities
+    from repro.data.radius_graph import banded_csr_layout
+
+    n_cap = pg_b.x.shape[1]
+    for d in range(2):
+        L = banded_csr_layout(np.asarray(sb.senders[d, 0]),
+                              np.asarray(sb.receivers[d, 0]), n_cap,
+                              edge_mask=np.asarray(sb.edge_mask[d, 0]))
+        np.testing.assert_array_equal(np.asarray(sb.lay_senders[d, 0]),
+                                      L.senders)
+        np.testing.assert_array_equal(np.asarray(sb.lay_block_rwin[d, 0]),
+                                      L.block_rwin)
+        np.testing.assert_array_equal(np.asarray(sb.lay_edge_mask[d, 0]),
+                                      L.edge_mask)
 
 
 def test_dynamic_radius_recovers_edges():
@@ -118,6 +227,99 @@ def test_dist_equals_single_device():
     assert res["x_err"] < 1e-5, res
     assert res["z_err"] < 1e-5, res
     assert res["z_sync"] == 0.0, res
+
+
+@pytest.mark.slow
+def test_dist_kernel_path_matches_jnp():
+    """Acceptance criterion: build_dist_apply(use_kernel=True) matches the
+    jnp path to fp32 tolerance (fwd + grad) on 2 shards, the shard-local
+    edge pathway dispatches to the banded kernel, and — with the host
+    layout supplied — zero trace-time regrouping happens (dispatch
+    telemetry, not absence-of-error)."""
+    out = _run_sub("""
+        import jax, numpy as np, jax.numpy as jnp, json
+        from repro.core import message_passing as mp
+        from repro.data.fluid import generate_fluid_dataset
+        from repro.data.partition import partition_sample
+        from repro.distributed.dist_egnn import (make_gnn_mesh, stack_partitions,
+                                                 build_dist_apply,
+                                                 build_dist_train_step)
+        from repro.models.fast_egnn import FastEGNNConfig, init_fast_egnn
+        from repro.training.optim import Adam
+        D = 2
+        data = generate_fluid_dataset(2, n_particles=200)
+        pgs = [partition_sample(s.x0, s.v0, s.h, s.x1, d=D, r=0.05, seed=i)
+               for i, s in enumerate(data)]
+        sb = stack_partitions(pgs)
+        cfg_j = FastEGNNConfig(n_layers=2, hidden=32, h_in=1, n_virtual=3, s_dim=16)
+        cfg_k = cfg_j._replace(use_kernel=True)
+        params = init_fast_egnn(jax.random.PRNGKey(0), cfg_j)
+        mesh = make_gnn_mesh(D)
+        xj, vsj = build_dist_apply(cfg_j, mesh)(params, sb)
+        mp.reset_dispatch_counts()
+        xk, vsk = build_dist_apply(cfg_k, mesh)(params, sb)
+        counts = mp.dispatch_counts()
+        opt = Adam(lr=1e-3)
+        _, lfj = build_dist_train_step(cfg_j, mesh, opt, lam_mmd=0.01)
+        _, lfk = build_dist_train_step(cfg_k, mesh, opt, lam_mmd=0.01)
+        gj = jax.grad(lambda p: lfj(p, sb))(params)
+        gk = jax.grad(lambda p: lfk(p, sb))(params)
+        rel = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b)) /
+                                              (jnp.max(jnp.abs(b)) + 1e-8)), gk, gj)
+        print(json.dumps({
+            "x_err": float(jnp.abs(xj - xk).max()),
+            "z_err": float(jnp.abs(vsj.z - vsk.z).max()),
+            "grad_rel": jax.tree.reduce(max, rel),
+            "counts": counts,
+        }))
+    """, n_dev=2)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["x_err"] < 1e-4, res
+    assert res["z_err"] < 1e-4, res
+    assert res["grad_rel"] < 5e-3, res
+    counts = res["counts"]
+    assert counts.get("edge_kernel", 0) > 0, counts
+    assert counts.get("edge_layout_host", 0) > 0, counts
+    assert counts.get("edge_layout_regroup", 0) == 0, counts
+
+
+@pytest.mark.slow
+def test_dist_equivariance_jnp_and_kernel_paths():
+    """Rotate + translate a partitioned batch: build_dist_apply output must
+    equivary (x' = R x + t ⇒ out' = R out + t), on both the jnp and the
+    per-shard fused kernel paths, under 8 forced host devices."""
+    out = _run_sub("""
+        import jax, numpy as np, jax.numpy as jnp, json
+        from repro.data.fluid import generate_fluid_dataset
+        from repro.data.partition import partition_sample
+        from repro.distributed.dist_egnn import (make_gnn_mesh, stack_partitions,
+                                                 build_dist_apply)
+        from repro.models.fast_egnn import FastEGNNConfig, init_fast_egnn
+        D = 8
+        data = generate_fluid_dataset(1, n_particles=320)[0]
+        pg = partition_sample(data.x0, data.v0, data.h, data.x1, d=D, r=0.05)
+        q, _ = np.linalg.qr(np.random.default_rng(5).normal(size=(3, 3)))
+        R = (q * np.sign(np.linalg.det(q))).astype(np.float32)  # det +1
+        t = np.array([0.3, -0.2, 0.5], np.float32)
+        pg_t = pg._replace(x=pg.x @ R.T + t, v=pg.v @ R.T,
+                           x_target=pg.x_target @ R.T + t)
+        sb, sb_t = stack_partitions([pg]), stack_partitions([pg_t])
+        cfg = FastEGNNConfig(n_layers=2, hidden=32, h_in=1, n_virtual=3, s_dim=16)
+        params = init_fast_egnn(jax.random.PRNGKey(0), cfg)
+        mesh = make_gnn_mesh(D)
+        errs = {}
+        for name, c in [("jnp", cfg), ("kernel", cfg._replace(use_kernel=True))]:
+            apply_fn = build_dist_apply(c, mesh)
+            x0, _ = apply_fn(params, sb)
+            x1, _ = apply_fn(params, sb_t)
+            want = jnp.asarray(np.asarray(x0) @ R.T + t)
+            m = sb.node_mask[..., None]
+            errs[name] = float(jnp.max(jnp.abs((x1 - want) * m)))
+        print(json.dumps(errs))
+    """, n_dev=8)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["jnp"] < 2e-4, res
+    assert res["kernel"] < 2e-4, res
 
 
 @pytest.mark.slow
