@@ -7,9 +7,8 @@ from typing import Callable
 import jax
 import numpy as np
 
-from repro.data.loader import dataset_to_batches
-from repro.models.registry import make_model
-from repro.training.trainer import TrainConfig, fit
+from repro.pipeline import build_pipeline
+from repro.training.trainer import TrainConfig
 
 ROWS: list[tuple[str, float, str]] = []
 
@@ -54,10 +53,9 @@ def train_and_eval(model: str, data, r, h_in, *, drop_rate=0.0, n_virtual=3,
                    epochs=25, batch=8, hidden=32, n_layers=3, lam_mmd=0.0,
                    seed=0, shared_virtual=False, lr=1e-3, **extra):
     """Quick-training protocol shared by the table benchmarks (scaled-down
-    version of the paper's Table IX hyperparameters)."""
+    version of the paper's Table IX hyperparameters), on the one pipeline
+    API (DESIGN.md §7): layout-carrying batches + ``pipe.fit``."""
     n_tr = int(0.75 * len(data))
-    tr = dataset_to_batches(data[:n_tr], batch, r=r, drop_rate=drop_rate)
-    va = dataset_to_batches(data[n_tr:], batch, r=r, drop_rate=drop_rate)
     kw = dict(h_in=h_in, n_layers=n_layers, hidden=hidden)
     if model == "linear":
         kw = {}
@@ -70,12 +68,14 @@ def train_and_eval(model: str, data, r, h_in, *, drop_rate=0.0, n_virtual=3,
     if model == "fast_egnn" and shared_virtual:
         kw["shared_virtual"] = True
     kw.update(extra)
-    cfg, params, apply_full = make_model(model, jax.random.PRNGKey(seed), **kw)
     # lr above the paper's 5e-4: the scaled-down protocol has ~100× fewer
     # optimisation steps, so quick runs use a proportionally hotter rate —
     # with a tight grad clip so dense-graph runs stay stable at that rate
     tc = TrainConfig(lr=lr, grad_clip=1.0, epochs=epochs, lam_mmd=lam_mmd,
                      early_stop=max(5, epochs // 3), seed=seed)
-    res = fit(apply_full, cfg, params, tr, va, tc)
-    t_inf = time_inference(apply_full, cfg, res.params, va)
+    pipe = build_pipeline(model, jax.random.PRNGKey(seed), train_cfg=tc, **kw)
+    tr = pipe.make_batches(data[:n_tr], batch, r=r, drop_rate=drop_rate)
+    va = pipe.make_batches(data[n_tr:], batch, r=r, drop_rate=drop_rate)
+    res = pipe.fit(tr, va)
+    t_inf = time_inference(pipe.apply_full, pipe.cfg, res.params, va)
     return res.best_val, t_inf

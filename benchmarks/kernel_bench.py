@@ -23,11 +23,15 @@ CLI::
         [--gate-eligible N]   # exit 1 unless kernel_eligible at n=N
         [--dist D]            # also record dist_kernel_mode rows (D shards)
         [--gate-dist]         # exit 1 unless the dist fused row dispatched
+        [--gate-single-dispatch]  # same gate for the single-device pipeline
 
 ``--gate-eligible`` is the CI regression gate for the banded-CSR tiling:
 it fails the bench-smoke job if the fused path ever loses eligibility at
 Water-3D scale (n=8192).  ``--gate-dist`` is the distributed-job gate for
-the per-shard fused path (DESIGN.md §6.6).
+the per-shard fused path (DESIGN.md §6.6); ``--gate-single-dispatch`` is
+its single-device twin — the pipeline train step over layout-carrying
+``GraphBatch``es must consume the host layout with zero trace-time
+regroups (DESIGN.md §7), recorded as ``kind='single_edge'`` rows.
 """
 from __future__ import annotations
 
@@ -142,13 +146,14 @@ def run_edge(quick: bool = True, deg: int = 8, hid: int = 64,
     if json_path is None and not quick:
         json_path = EDGE_BENCH_JSON
     if json_path is not None:
-        # preserve dist_kernel_mode rows other writers (table45, a previous
-        # --dist run) merged into this file — the sweep only owns its own
-        # single-device rows
+        # preserve the dispatch-mode rows other writers (table45, a previous
+        # --dist / --gate-single-dispatch run) merged into this file — the
+        # sweep only owns its own timing rows
         old = _read_bench_json(json_path)
         payload = dict(backend=jax.default_backend(), deg=deg,
                        rows=list(rows) + [r for r in old.get("rows", [])
-                                          if r.get("kind") == "dist_edge"])
+                                          if r.get("kind") in ("dist_edge",
+                                                               "single_edge")])
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=2)
     return rows
@@ -225,12 +230,62 @@ def run_dist(d: int = 2, n: int = 512, source: str = "kernel_bench") -> list[dic
     return rows
 
 
-def record_dist_rows(rows: list[dict], json_path: str = EDGE_BENCH_JSON) -> None:
-    """Merge ``dist_kernel_mode`` rows into the edge-bench JSON.
+def run_single_dispatch(n: int = 48, n_samples: int = 8, batch: int = 4,
+                        source: str = "kernel_bench") -> list[dict]:
+    """Single-device host-layout dispatch rows (DESIGN.md §7).
 
-    Existing rows with the same (kind, source, d, n, dist_kernel_mode) key
-    are replaced; everything else (the single-device sweep rows, other
-    sources' dist rows) is preserved — ``table45_distributed`` and the
+    Traces ``build_pipeline(mesh=None)``'s train step over layout-carrying
+    batches for both edge-pathway modes and records ``dispatch_mode`` rows
+    (``kind='single_edge'``, keyed like the dist rows with ``d=1``): the
+    fused row must show the kernel consumed the batch's host layout with
+    zero trace-time regroups — the single-device twin of ``--gate-dist``.
+    Runs in-process (no forced devices needed).
+    """
+    from repro.core import message_passing as mp
+    from repro.data.nbody import generate_nbody_dataset
+    from repro.pipeline import build_pipeline
+    from repro.training.trainer import TrainConfig
+
+    data = generate_nbody_dataset(n_samples, n_nodes=n, seed=0)
+    backend_mode = "tpu" if jax.default_backend() == "tpu" else "interpret"
+    rows = []
+    for use_kernel in (False, True):
+        pipe = build_pipeline(
+            "fast_egnn", jax.random.PRNGKey(0),
+            train_cfg=TrainConfig(lam_mmd=0.01),
+            n_layers=2, hidden=32, h_in=1, n_virtual=3, s_dim=16,
+            use_kernel=use_kernel)
+        batches = pipe.make_batches(data, batch)
+        st = pipe.opt.init(pipe.params)
+        key = jax.random.PRNGKey(0)
+        mp.reset_dispatch_counts()
+        jax.block_until_ready(
+            pipe.train_step(pipe.params, st, batches[0], key))  # compile
+        c = mp.dispatch_counts()
+        reps = 3 if (backend_mode == "tpu" or not use_kernel) else 1
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(
+                pipe.train_step(pipe.params, st, batches[0], key))
+        t_us = (time.perf_counter() - t0) / reps * 1e6
+        mode = mp.dispatch_mode(c, use_kernel, backend_mode)
+        rows.append(dict(kind="single_edge", source=source, d=1, n=n,
+                         use_kernel=use_kernel, dispatch_mode=mode,
+                         step_us=t_us,
+                         regroups=c.get("edge_layout_regroup", 0),
+                         layout_host=c.get("edge_layout_host", 0)))
+        emit(f"kernel/single_edge_{mode}", t_us,
+             f"n={n};regroups={rows[-1]['regroups']};"
+             f"layout_host={rows[-1]['layout_host']}")
+    return rows
+
+
+def record_dist_rows(rows: list[dict], json_path: str = EDGE_BENCH_JSON) -> None:
+    """Merge dispatch-mode rows (dist or single_edge) into the bench JSON.
+
+    Existing rows with the same (kind, source, d, n, use_kernel) key are
+    replaced; everything else (the single-device sweep rows, other
+    sources' dispatch rows) is preserved — ``table45_distributed`` and the
     bench-smoke job both write here without clobbering each other.
     """
     if not rows:
@@ -301,6 +356,11 @@ def main(argv: list[str] | None = None) -> int:
     p.add_argument("--dist-only", action="store_true",
                    help="skip the single-device sweeps entirely (the CI "
                         "distributed job's dispatch gate)")
+    p.add_argument("--gate-single-dispatch", action="store_true",
+                   help="trace the single-device pipeline train step over "
+                        "layout-carrying batches and exit 1 unless the fused "
+                        "row consumed the host layout with zero trace-time "
+                        "regroups (CI gate, DESIGN.md §7)")
     args = p.parse_args(argv)
 
     sizes = (tuple(int(s) for s in args.sizes.split(","))
@@ -309,6 +369,22 @@ def main(argv: list[str] | None = None) -> int:
         run(quick=sizes is not None)
     rows = ([] if args.dist_only else
             run_edge(quick=sizes is not None, json_path=args.json, sizes=sizes))
+
+    if args.gate_single_dispatch:
+        single_rows = run_single_dispatch()
+        single_json = args.json or (EDGE_BENCH_JSON if sizes is None else None)
+        if single_json is not None:
+            record_dist_rows(single_rows, single_json)
+        fused = [r for r in single_rows if r.get("use_kernel")]
+        ok = fused and all(r["dispatch_mode"] in ("interpret", "tpu")
+                           and r["regroups"] == 0 and r["layout_host"] > 0
+                           for r in fused)
+        if not ok:
+            print(f"GATE FAILED: single-device pipeline did not dispatch via "
+                  f"host layouts: {single_rows}")
+            return 1
+        print(f"GATE OK: single-device pipeline dispatched via host layouts "
+              f"(mode={fused[0]['dispatch_mode']}, regroups=0)")
 
     if args.dist is not None:
         dist_rows = run_dist(d=args.dist)

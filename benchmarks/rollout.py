@@ -18,9 +18,9 @@ import numpy as np
 
 from benchmarks.common import emit
 from repro.data.fluid import FluidSample, simulate_fluid
-from repro.data.loader import dataset_to_batches, sample_to_arrays, make_batch
-from repro.models.registry import make_model
-from repro.training.trainer import TrainConfig, fit
+from repro.data.loader import sample_to_arrays, make_batch
+from repro.pipeline import build_pipeline
+from repro.training.trainer import TrainConfig
 
 
 def _trajectory_pairs(trajs, dt_frames: int) -> list[FluidSample]:
@@ -69,14 +69,14 @@ def run(quick: bool = True):
     drop = 0.75
     for model, kw in (("egnn", {}), ("fast_egnn", dict(n_virtual=3, s_dim=32))):
         n_tr = max(1, int(0.8 * len(pairs)))
-        tr = dataset_to_batches(pairs[:n_tr], 4, r=r, drop_rate=drop)
-        va = dataset_to_batches(pairs[n_tr:], 4, r=r, drop_rate=drop)
-        cfg, params, apply_full = make_model(
-            model, jax.random.PRNGKey(0), h_in=1, n_layers=3, hidden=32, **kw)
         tc = TrainConfig(epochs=epochs, lam_mmd=0.03 if model.startswith("fast") else 0.0,
                          early_stop=max(5, epochs // 3), seed=0)
-        res = fit(apply_full, cfg, params, tr, va, tc)
-        errs = _rollout_mse(apply_full, cfg, res.params, ho_xs, ho_vs,
+        pipe = build_pipeline(model, jax.random.PRNGKey(0), train_cfg=tc,
+                              h_in=1, n_layers=3, hidden=32, **kw)
+        tr = pipe.make_batches(pairs[:n_tr], 4, r=r, drop_rate=drop)
+        va = pipe.make_batches(pairs[n_tr:], 4, r=r, drop_rate=drop)
+        res = pipe.fit(tr, va)
+        errs = _rollout_mse(pipe.apply_full, pipe.cfg, res.params, ho_xs, ho_vs,
                             dt_frames, n_roll, r, drop, dt)
         for k, e in enumerate(errs, 1):
             emit(f"rollout/{model}_step{k}", 0.0, f"mse={e:.6f}")

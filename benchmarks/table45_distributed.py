@@ -28,43 +28,36 @@ _CHILD = """
 import json, time, jax, numpy as np
 from repro.core import message_passing as mp
 from repro.data.fluid import generate_fluid_dataset
-from repro.data.partition import partition_sample
-from repro.distributed.dist_egnn import (make_gnn_mesh, stack_partitions,
-                                         build_dist_train_step, build_dist_apply)
-from repro.models.fast_egnn import FastEGNNConfig, init_fast_egnn
-from repro.training.optim import Adam
+from repro.distributed.dist_egnn import make_gnn_mesh
+from repro.pipeline import build_pipeline
+from repro.training.trainer import TrainConfig
 
 D = {d}
 C = {c}
 data = generate_fluid_dataset({n_samples}, n_particles={n_nodes}, seed=0)
-pgs_all = [[partition_sample(s.x0, s.v0, s.h, s.x1, d=D, r={r}, seed=j)
-            for j, s in enumerate(data[i:i+{batch}])]
-           for i in range(0, len(data) - {batch} + 1, {batch})]
-batches = [stack_partitions(p) for p in pgs_all]
+mp.reset_dispatch_counts()
+pipe = build_pipeline("fast_egnn", jax.random.PRNGKey(0),
+                      mesh=make_gnn_mesh(D),
+                      train_cfg=TrainConfig(lr=5e-4, lam_mmd=0.01),
+                      n_layers=3, hidden=32, h_in=1, n_virtual=C, s_dim=32,
+                      use_kernel={use_kernel})
+batches = pipe.make_batches(data, {batch}, r={r})
 edges = float(np.mean([b.edge_mask.sum() / D for b in batches]))
 deg = edges / (data[0].x0.shape[0] / D)
-cfg = FastEGNNConfig(n_layers=3, hidden=32, h_in=1, n_virtual=C, s_dim=32,
-                     use_kernel={use_kernel})
-params = init_fast_egnn(jax.random.PRNGKey(0), cfg)
-mesh = make_gnn_mesh(D)
-opt = Adam(lr=5e-4)
-mp.reset_dispatch_counts()
-step, loss_fn = build_dist_train_step(cfg, mesh, opt, lam_mmd=0.01)
-st = opt.init(params)
-step(params, st, batches[0])  # compile
+step = pipe.train_step
+st = pipe.opt.init(pipe.params)
+step(pipe.params, st, batches[0])  # compile
 counts = mp.dispatch_counts()
 t0 = time.perf_counter()
-p = params
+p = pipe.params
 for _ in range({epochs}):
     for b in batches:
-        p, st, loss = step(p, st, b)
+        p, st, m = step(p, st, b)
 t_step = (time.perf_counter() - t0) / ({epochs} * len(batches))
 # eval MSE on held-out
 val = generate_fluid_dataset(4, n_particles={n_nodes}, seed=99)
-vb = stack_partitions([partition_sample(s.x0, s.v0, s.h, s.x1, d=D, r={r}, seed=j)
-                       for j, s in enumerate(val)])
-apply_fn = build_dist_apply(cfg, mesh)
-xp, _ = apply_fn(p, vb)
+vb = pipe.make_batches(val, 4, r={r})[0]
+xp = pipe.predict(p, vb)
 import jax.numpy as jnp
 err = jnp.sum(jnp.sum((xp - vb.x_target) ** 2, -1) * vb.node_mask) / jnp.sum(vb.node_mask) / 3
 # per-device working set (workset_dev_bytes — renamed from the old
@@ -76,8 +69,7 @@ err = jnp.sum(jnp.sum((xp - vb.x_target) ** 2, -1) * vb.node_mask) / jnp.sum(vb.
 work_set = sum(int(np.prod(a.shape[1:])) * 4
                for f, a in zip(batches[0]._fields, batches[0])
                if not f.startswith("lay_"))
-backend_mode = "tpu" if jax.default_backend() == "tpu" else "interpret"
-mode = mp.dispatch_mode(counts, {use_kernel}, backend_mode)
+mode = pipe.dispatch_report()["mode"]
 print(json.dumps(dict(d=D, edges_per_dev=edges, avg_degree=deg,
                       mse=float(err), step_s=t_step, workset_dev_bytes=work_set,
                       dist_kernel_mode=mode,

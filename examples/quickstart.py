@@ -1,14 +1,18 @@
 """Quickstart: train FastEGNN on a charged N-body system and compare it with
 EGNN under edge dropping — the paper's headline result in 2 minutes on CPU.
 
+Uses the one pipeline API (DESIGN.md §7): ``build_pipeline`` makes the
+model, ``pipe.make_batches`` builds layout-carrying batches and
+``pipe.fit`` trains — the same three calls drive the distributed DistEGNN
+path when a mesh is passed.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 
-from repro.data.loader import dataset_to_batches
 from repro.data.nbody import generate_nbody_dataset
-from repro.models.registry import make_model
-from repro.training.trainer import TrainConfig, fit
+from repro.pipeline import build_pipeline
+from repro.training.trainer import TrainConfig
 
 
 def main():
@@ -24,14 +28,14 @@ def main():
         ("fast_egnn", "fast_egnn-3 (all edges dropped)", 1.0,
          dict(h_in=1, n_layers=3, hidden=32, n_virtual=3, s_dim=32)),
     ]:
-        tr = dataset_to_batches(data[:split], 6, drop_rate=drop)
-        va = dataset_to_batches(data[split:], 6, drop_rate=drop)
-        cfg, params, apply_full = make_model(model, jax.random.PRNGKey(0), **kw)
         # scaled-down protocol: hotter lr + tight clip for the short budget
         # (matches benchmarks/common.py)
         tc = TrainConfig(lr=1e-3, grad_clip=1.0, epochs=40,
                          lam_mmd=0.03 if model == "fast_egnn" else 0.0)
-        res = fit(apply_full, cfg, params, tr, va, tc)
+        pipe = build_pipeline(model, jax.random.PRNGKey(0), train_cfg=tc, **kw)
+        tr = pipe.make_batches(data[:split], 6, drop_rate=drop)
+        va = pipe.make_batches(data[split:], 6, drop_rate=drop)
+        res = pipe.fit(tr, va)
         results[name] = res.best_val
         print(f"{name:36s} val MSE {res.best_val:.5f}  ({res.wall_time:.0f}s)")
 

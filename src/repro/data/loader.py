@@ -1,20 +1,58 @@
-"""Dataset → padded/batched GeometricGraph conversion + iteration."""
+"""Dataset → padded/batched GeometricGraph conversion + iteration.
+
+This is the single-device half of the pipeline data contract (DESIGN.md §7):
+:class:`GraphBatch` carries, alongside the padded graph arrays, the
+host-precomputed banded-CSR :class:`~repro.kernels.edge_message.EdgeLayout`
+for the fused Pallas edge kernel — the same layout the DistEGNN partition
+pipeline threads through ``ShardedBatch`` (§6.6), so ``trainer.fit`` /
+``build_pipeline(mesh=None)`` dispatch with **zero trace-time regroups**
+exactly like the distributed path.  All samples of a dataset share one
+(node, edge, band) capacity, so one jitted program serves every batch.
+"""
 from __future__ import annotations
 
-from typing import Iterable, Iterator, NamedTuple, Sequence
+import warnings
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import GeometricGraph
-from repro.data.radius_graph import (drop_longest_edges, pad_edges, pad_nodes,
-                                     radius_graph, sort_edges_by_receiver)
+from repro.data.radius_graph import (banded_csr_layout, drop_longest_edges,
+                                     pad_edges, pad_nodes, radius_graph,
+                                     sort_edges_by_receiver)
+
+_NODE_KEYS = ("x", "v", "h", "x_target", "node_mask")
+_EDGE_KEYS = ("senders", "receivers", "edge_mask")
 
 
 class GraphBatch(NamedTuple):
+    """One fixed-shape training batch.
+
+    graph/x_target carry a leading batch dim (B, ...).  ``layout`` is the
+    stacked host-precomputed banded-CSR layout (``EdgeLayout`` pytree with
+    (B, ·) children, shared static ``meta``) consumed by the fused edge
+    kernel — ``None`` for layout-free batches (the jnp path ignores it).
+    ``sample_mask`` (B,) marks real batch slots: the trailing partial batch
+    of a dataset is padded to ``batch_size`` with replicas of its last
+    sample at mask 0, so losses/metrics must weight by it; ``None`` means
+    every slot is real (full batches).
+    """
+
     graph: GeometricGraph  # arrays with leading batch dim (B, ...)
     x_target: jax.Array  # (B, N, 3)
+    layout: Optional[object] = None  # kernels.edge_message.EdgeLayout | None
+    sample_mask: Optional[jax.Array] = None  # (B,) 1.0 real / 0.0 padding
+
+
+def sample_h(s) -> np.ndarray:
+    """A raw sample's invariant feature field (``h``, or ``charges`` for
+    the N-body dataset) — the one place the field fallback lives."""
+    h = getattr(s, "h", None)
+    if h is None:
+        h = s.charges
+    return h
 
 
 def sample_to_arrays(
@@ -44,7 +82,78 @@ def sample_to_arrays(
                 edge_mask=em, x_target=tp)
 
 
-def make_batch(samples: Sequence[dict]) -> GraphBatch:
+def repad_arrays(a: dict, node_cap: int, edge_cap: int) -> dict:
+    """Grow one sample's padded arrays to larger shared capacities.
+
+    Padding slots are masked zeros, so extending them is a zero-pad — no
+    second ``sample_to_arrays`` pass (the radius graph, edge drop and CSR
+    sort are capacity-independent and already done).
+    """
+    out = dict(a)
+    for k in _NODE_KEYS:
+        pad = node_cap - a[k].shape[0]
+        if pad:
+            out[k] = np.pad(a[k], [(0, pad)] + [(0, 0)] * (a[k].ndim - 1))
+    for k in _EDGE_KEYS:
+        pad = edge_cap - a[k].shape[0]
+        if pad:
+            out[k] = np.pad(a[k], (0, pad))
+    return out
+
+
+def attach_layout(a: dict, block_e: int | None = None) -> dict:
+    """Build the host banded-CSR layout over one sample's *padded* edge
+    arrays (the same arrays the trace-time regroup would see, so the fused
+    kernel consumes it verbatim — DESIGN.md §6.6) and store the
+    ``BandedCSR`` under ``"layout"``.  Samples sharing (node, edge)
+    capacities get one band capacity by construction, so stacked batches
+    are rectangular.
+    """
+    from repro.core.message_passing import EDGE_KERNEL_BLOCK_E
+
+    a = dict(a)
+    a["layout"] = banded_csr_layout(
+        a["senders"], a["receivers"], a["x"].shape[0],
+        edge_mask=a["edge_mask"],
+        block_e=block_e or EDGE_KERNEL_BLOCK_E)
+    return a
+
+
+def _stack_layouts(lays):
+    """Per-sample ``BandedCSR`` layouts → one batched ``EdgeLayout``."""
+    from repro.kernels.edge_message import EdgeLayout, LayoutMeta
+
+    l0 = lays[0]
+    meta = LayoutMeta(l0.window, l0.swindow, l0.n_pad, l0.block_e)
+    for l in lays[1:]:  # shared caps ⇒ shared band geometry, by construction
+        assert LayoutMeta(l.window, l.swindow, l.n_pad, l.block_e) == meta, \
+            "all samples of a batch must share one band geometry"
+    return EdgeLayout(
+        senders=jnp.asarray(np.stack([l.senders for l in lays])),
+        receivers=jnp.asarray(np.stack([l.receivers for l in lays])),
+        edge_mask=jnp.asarray(np.stack([l.edge_mask for l in lays])),
+        block_rwin=jnp.asarray(np.stack([l.block_rwin for l in lays])),
+        block_swin=jnp.asarray(np.stack([l.block_swin for l in lays])),
+        meta=meta)
+
+
+def make_batch(samples: Sequence[dict], pad_to: int | None = None) -> GraphBatch:
+    """Stack per-sample array dicts into one GraphBatch.
+
+    Samples carrying a ``"layout"`` entry (see :func:`attach_layout`) yield
+    a layout-carrying batch.  ``pad_to`` pads a short batch to that many
+    slots by replicating the last sample with ``sample_mask`` 0 — losses
+    and metrics must weight by the mask (``trainer`` does).
+    """
+    samples = [dict(s) for s in samples]
+    mask = None
+    if pad_to is not None and len(samples) < pad_to:
+        n_real = len(samples)
+        samples += [dict(samples[-1]) for _ in range(pad_to - n_real)]
+        mask = jnp.asarray(
+            (np.arange(pad_to) < n_real).astype(np.float32))
+    lays = [s.pop("layout", None) for s in samples]
+    layout = _stack_layouts(lays) if all(l is not None for l in lays) else None
     stk = {k: np.stack([s[k] for s in samples]) for k in samples[0]}
     b, e = stk["senders"].shape
     g = GeometricGraph(
@@ -57,7 +166,8 @@ def make_batch(samples: Sequence[dict]) -> GraphBatch:
         node_mask=jnp.asarray(stk["node_mask"]),
         edge_mask=jnp.asarray(stk["edge_mask"]),
     )
-    return GraphBatch(graph=g, x_target=jnp.asarray(stk["x_target"]))
+    return GraphBatch(graph=g, x_target=jnp.asarray(stk["x_target"]),
+                      layout=layout, sample_mask=mask)
 
 
 def dataset_to_batches(
@@ -68,30 +178,45 @@ def dataset_to_batches(
     drop_rate: float = 0.0,
     edge_cap: int | None = None,
     shuffle_seed: int | None = None,
+    with_layout: bool = True,
+    drop_last: bool = False,
 ) -> list[GraphBatch]:
     """Convert raw samples (NamedTuples with x0/v0/x1 + feature field) into
-    fixed-shape batches.  Per-dataset edge capacity = max over samples."""
+    fixed-shape batches.
+
+    Per-dataset capacities = max over samples; samples built below the
+    common capacity are *re-padded in place* (:func:`repad_arrays`), not
+    rebuilt from scratch.  With ``with_layout`` every sample also gets the
+    host banded-CSR layout at the shared capacities, so the batches feed
+    the fused edge kernel with zero trace-time regroups.  The trailing
+    ``len % batch_size`` samples become a final mask-padded partial batch
+    (:func:`make_batch` ``pad_to``) instead of being silently dropped;
+    ``drop_last`` restores the old behaviour (warning with the count).
+    """
     arrays = []
     for s in samples:
-        h = getattr(s, "h", None)
-        if h is None:
-            h = s.charges
-        arrays.append(sample_to_arrays(s.x0, s.v0, h, s.x1, r=r, drop_rate=drop_rate))
-    cap = edge_cap or max(a["senders"].shape[0] for a in arrays)
-    if any(a["senders"].shape[0] != cap for a in arrays):
-        # re-pad to common capacity
-        rebuilt = []
-        for s in samples:
-            h = getattr(s, "h", None)
-            if h is None:
-                h = s.charges
-            rebuilt.append(sample_to_arrays(s.x0, s.v0, h, s.x1, r=r,
-                                            drop_rate=drop_rate, edge_cap=cap))
-        arrays = rebuilt
+        arrays.append(sample_to_arrays(s.x0, s.v0, sample_h(s), s.x1, r=r,
+                                       drop_rate=drop_rate, edge_cap=edge_cap))
+    if not arrays:
+        return []
+    n_cap = max(a["x"].shape[0] for a in arrays)
+    e_cap = edge_cap or max(a["senders"].shape[0] for a in arrays)
+    arrays = [a if a["x"].shape[0] == n_cap and a["senders"].shape[0] == e_cap
+              else repad_arrays(a, n_cap, e_cap) for a in arrays]
+    if with_layout:
+        arrays = [attach_layout(a) for a in arrays]
     if shuffle_seed is not None:
         rng = np.random.default_rng(shuffle_seed)
         rng.shuffle(arrays)
     batches = []
     for i in range(0, len(arrays) - batch_size + 1, batch_size):
         batches.append(make_batch(arrays[i : i + batch_size]))
+    rem = len(arrays) % batch_size
+    if rem:
+        if drop_last:
+            warnings.warn(
+                f"dataset_to_batches: dropping the trailing {rem} samples "
+                f"(drop_last=True, batch_size={batch_size})", stacklevel=2)
+        else:
+            batches.append(make_batch(arrays[-rem:], pad_to=batch_size))
     return batches

@@ -4,8 +4,12 @@ Two modes:
   * GNN mode (the paper): train FastEGNN/DistEGNN on a synthetic dataset —
       python -m repro.launch.train gnn --model fast_egnn --dataset nbody \
           --epochs 50 --n-virtual 3 --drop-rate 0.75 [--devices 4]
-    (--devices > 1 re-executes itself with forced host devices and runs the
-    DistEGNN shard_map path.)
+    Both device counts go through the one pipeline API (DESIGN.md §7):
+    ``build_pipeline(name, key, mesh=...)`` + ``pipe.make_batches`` +
+    ``pipe.fit`` — ``--devices 1`` drives the vmap trainer over
+    layout-carrying GraphBatches, ``--devices > 1`` re-executes itself
+    with forced host devices and drives the shard_map DistEGNN path
+    (model pinned to fast_egnn, the paper's Sec. VI architecture).
   * LM mode (assigned pool): short real-data-free training run of a reduced
     architecture —
       python -m repro.launch.train lm --arch gemma3-12b --steps 100
@@ -22,10 +26,16 @@ def gnn_main(args):
     import jax
     import numpy as np
 
-    from repro.data.loader import dataset_to_batches
-    from repro.models.registry import make_model
+    from repro.pipeline import build_pipeline
     from repro.training.checkpoint import save_checkpoint
-    from repro.training.trainer import TrainConfig, fit
+    from repro.training.trainer import TrainConfig
+
+    if args.devices > 1:
+        # DistEGNN needs D host devices before jax initialises: re-exec once
+        want = f"--xla_force_host_platform_device_count={args.devices}"
+        if os.environ.get("XLA_FLAGS", "") != want:
+            os.environ["XLA_FLAGS"] = want
+            os.execv(sys.executable, [sys.executable] + sys.argv)
 
     if args.dataset == "nbody":
         from repro.data.nbody import generate_nbody_dataset
@@ -41,68 +51,37 @@ def gnn_main(args):
         r, h_in = 10.0, 4
 
     n_tr = int(0.8 * len(data))
+    model = args.model
     kw = dict(h_in=h_in, n_layers=args.n_layers, hidden=args.hidden)
-    if args.model.startswith("fast_"):
+    mesh = None
+    if args.devices > 1:
+        from repro.distributed.dist_egnn import make_gnn_mesh
+
+        mesh = make_gnn_mesh(args.devices)
+        model = "fast_egnn"  # DistEGNN (Sec. VI) is FastEGNN under shard_map
+    if model.startswith("fast_"):
         kw.update(n_virtual=args.n_virtual)
-        if args.model in ("fast_egnn", "fast_schnet", "fast_tfn"):
+        if model in ("fast_egnn", "fast_schnet", "fast_tfn"):
             kw.update(s_dim=args.hidden)
-    if args.model in ("linear",):
+    if model in ("linear",):
         kw = {}
-    if args.model == "mpnn":
+    if model == "mpnn":
         kw = dict(h_in=h_in, n_layers=args.n_layers, hidden=args.hidden)
 
-    if args.devices > 1:
-        _dist_gnn(args, data, n_tr, h_in, r)
-        return
-
-    import jax.numpy as jnp
-    tr = dataset_to_batches(data[:n_tr], args.batch, r=r, drop_rate=args.drop_rate)
-    va = dataset_to_batches(data[n_tr:], args.batch, r=r, drop_rate=args.drop_rate)
-    cfg, params, apply_full = make_model(args.model, jax.random.PRNGKey(args.seed), **kw)
     tc = TrainConfig(epochs=args.epochs, lam_mmd=args.lam_mmd,
                      mmd_sigma=args.mmd_sigma, seed=args.seed)
-    res = fit(apply_full, cfg, params, tr, va, tc, verbose=True)
-    print(f"best val MSE: {res.best_val:.6f}  wall: {res.wall_time:.1f}s")
+    pipe = build_pipeline(model, jax.random.PRNGKey(args.seed), mesh=mesh,
+                          train_cfg=tc, **kw)
+    bk = dict(r=r, drop_rate=args.drop_rate, partition=args.partition)
+    tr = pipe.make_batches(data[:n_tr], args.batch, **bk)
+    va = pipe.make_batches(data[n_tr:], args.batch, **bk)
+    res = pipe.fit(tr, va, verbose=True)
+    print(f"best val MSE: {res.best_val:.6f}  wall: {res.wall_time:.1f}s"
+          f"  devices: {args.devices}")
     if args.checkpoint:
         save_checkpoint(args.checkpoint, res.params,
-                        {"model": args.model, "val_mse": res.best_val})
+                        {"model": model, "val_mse": res.best_val})
         print("saved", args.checkpoint)
-
-
-def _dist_gnn(args, data, n_tr, h_in, r):
-    """DistEGNN training across forced host devices (re-exec with XLA_FLAGS)."""
-    want = f"--xla_force_host_platform_device_count={args.devices}"
-    if os.environ.get("XLA_FLAGS", "") != want:
-        os.environ["XLA_FLAGS"] = want
-        os.execv(sys.executable, [sys.executable] + sys.argv)
-    import jax
-
-    from repro.data.partition import partition_sample
-    from repro.distributed.dist_egnn import (build_dist_train_step, make_gnn_mesh,
-                                             stack_partitions)
-    from repro.models.fast_egnn import FastEGNNConfig, init_fast_egnn
-    from repro.training.optim import Adam
-
-    cfg = FastEGNNConfig(n_layers=args.n_layers, hidden=args.hidden, h_in=h_in,
-                         n_virtual=args.n_virtual, s_dim=args.hidden)
-    params = init_fast_egnn(jax.random.PRNGKey(args.seed), cfg)
-    mesh = make_gnn_mesh(args.devices)
-    opt = Adam(lr=5e-4)
-    step, loss_fn = build_dist_train_step(cfg, mesh, opt, lam_mmd=args.lam_mmd)
-    st = opt.init(params)
-    batches = []
-    for i in range(0, n_tr - args.batch + 1, args.batch):
-        pgs = [partition_sample(s.x0, s.v0, getattr(s, "h", s.charges), s.x1,
-                                d=args.devices, r=r, strategy=args.partition,
-                                drop_rate=args.drop_rate, seed=j)
-               for j, s in enumerate(data[i : i + args.batch])]
-        batches.append(stack_partitions(pgs))
-    t0 = time.time()
-    for epoch in range(args.epochs):
-        for b in batches:
-            params, st, loss = step(params, st, b)
-        print(f"epoch {epoch}: loss {float(loss):.6f}", flush=True)
-    print(f"done in {time.time()-t0:.1f}s on {args.devices} devices")
 
 
 def lm_main(args):

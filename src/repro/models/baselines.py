@@ -53,10 +53,11 @@ def init_mpnn(key, cfg: MPNNConfig):
     }
 
 
-def mpnn_apply(params, cfg: MPNNConfig, g: GeometricGraph) -> Array:
+def mpnn_apply(params, cfg: MPNNConfig, g: GeometricGraph,
+               edge_layout=None) -> Array:
     z = mlp(params["embed"], jnp.concatenate([g.h, g.x, g.v], axis=-1))
     for lp in params["layers"]:
         _, agg = edge_pathway({"phi1": lp["msg"]}, z, g.x, g, MPNN_EDGE_SPEC,
-                              use_kernel=cfg.use_kernel)
+                              use_kernel=cfg.use_kernel, layout=edge_layout)
         z = z + mlp(lp["upd"], jnp.concatenate([z, agg], axis=-1))
     return g.x + mlp(params["dec"], z)

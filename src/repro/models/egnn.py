@@ -72,12 +72,18 @@ def real_real_pathway(lp, h: Array, x: Array, g: GeometricGraph,
                         layout=edge_layout)
 
 
-def egnn_apply(params, cfg: EGNNConfig, g: GeometricGraph) -> tuple[Array, Array]:
-    """Returns updated coordinates (N,3) and features (N,hidden)."""
+def egnn_apply(params, cfg: EGNNConfig, g: GeometricGraph,
+               edge_layout=None) -> tuple[Array, Array]:
+    """Returns updated coordinates (N,3) and features (N,hidden).
+
+    ``edge_layout`` optionally carries this graph's host-precomputed banded
+    layout into the fused kernel (zero trace-time regrouping — the
+    layout-carrying batch contract, DESIGN.md §7)."""
     h = mlp(params["embed"], g.h)
     x = g.x
     for lp in params["layers"]:
-        dx, mh = real_real_pathway(lp, h, x, g, cfg.coord_clamp, cfg.use_kernel)
+        dx, mh = real_real_pathway(lp, h, x, g, cfg.coord_clamp, cfg.use_kernel,
+                                   edge_layout=edge_layout)
         if cfg.velocity:
             dx = dx + mlp(lp["phi_v"], h) * g.v  # φ_v(h_i)·v_i^(0)
         x = x + dx * g.node_mask[:, None]

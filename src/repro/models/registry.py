@@ -59,36 +59,42 @@ def compose_virtual(base: ModelSpec, n_virtual: int = 3) -> ModelSpec:
     )
 
 
-def _egnn_full(p, cfg, g, axis_name=None):
-    x, h = egnn.egnn_apply(p, cfg, g)
+# Every apply_full shares one signature:
+#   apply_full(params, cfg, graph, axis_name=None, edge_layout=None)
+# ``edge_layout`` is the batch's host-precomputed banded layout (the
+# layout-carrying batch contract, DESIGN.md §7); models without a
+# φ1-form edge pathway (linear, tfn) accept and ignore it.
+def _egnn_full(p, cfg, g, axis_name=None, edge_layout=None):
+    x, h = egnn.egnn_apply(p, cfg, g, edge_layout=edge_layout)
     return x, {"h": h}
 
 
-def _fast_egnn_full(p, cfg, g, axis_name=None):
-    x, h, vs = fast_egnn.fast_egnn_apply(p, cfg, g, axis_name=axis_name)
+def _fast_egnn_full(p, cfg, g, axis_name=None, edge_layout=None):
+    x, h, vs = fast_egnn.fast_egnn_apply(p, cfg, g, axis_name=axis_name,
+                                         edge_layout=edge_layout)
     return x, {"h": h, "virtual": vs}
 
 
-def _rf_full(p, cfg, g, axis_name=None):
-    return rf.rf_apply(p, cfg, g, axis_name), {}
+def _rf_full(p, cfg, g, axis_name=None, edge_layout=None):
+    return rf.rf_apply(p, cfg, g, axis_name, edge_layout=edge_layout), {}
 
 
-def _schnet_full(p, cfg, g, axis_name=None):
-    x, h = schnet.schnet_apply(p, cfg, g, axis_name)
+def _schnet_full(p, cfg, g, axis_name=None, edge_layout=None):
+    x, h = schnet.schnet_apply(p, cfg, g, axis_name, edge_layout=edge_layout)
     return x, {"h": h}
 
 
-def _tfn_full(p, cfg, g, axis_name=None):
+def _tfn_full(p, cfg, g, axis_name=None, edge_layout=None):
     x, h = tfn.tfn_apply(p, cfg, g, axis_name)
     return x, {"h": h}
 
 
-def _linear_full(p, cfg, g, axis_name=None):
+def _linear_full(p, cfg, g, axis_name=None, edge_layout=None):
     return baselines.linear_dyn_apply(p, cfg, g), {}
 
 
-def _mpnn_full(p, cfg, g, axis_name=None):
-    return baselines.mpnn_apply(p, cfg, g), {}
+def _mpnn_full(p, cfg, g, axis_name=None, edge_layout=None):
+    return baselines.mpnn_apply(p, cfg, g, edge_layout=edge_layout), {}
 
 
 _BASE: dict[str, ModelSpec] = {
@@ -115,8 +121,12 @@ for _name in ("rf", "schnet", "tfn"):
     REGISTRY[f"fast_{_name}"] = compose_virtual(_BASE[_name])
 
 
-def make_model(name: str, key, **cfg_overrides):
-    """Returns (cfg, params, apply_full)."""
+def resolve_model(name: str, key, **cfg_overrides):
+    """Registry name + overrides → (cfg, params, apply_full).
+
+    The spec-composition core shared by ``repro.pipeline.build_pipeline``
+    (the supported entry point) and the deprecated :func:`make_model` shim.
+    """
     spec = REGISTRY[name]
     for k, v in spec.cfg_defaults.items():
         cfg_overrides.setdefault(k, v)
@@ -124,3 +134,22 @@ def make_model(name: str, key, **cfg_overrides):
     cfg = spec.make_config(**cfg_overrides)
     params = spec.init(key, cfg)
     return cfg, params, spec.apply_full
+
+
+def make_model(name: str, key, **cfg_overrides):
+    """Deprecated: use ``repro.pipeline.build_pipeline`` (DESIGN.md §7).
+
+    Kept as a thin shim with the exact historical contract — returns
+    ``(cfg, params, apply_full)`` built by the pipeline factory — so
+    external callers and old scripts keep working unchanged.
+    """
+    import warnings
+
+    warnings.warn(
+        "make_model is deprecated; use repro.pipeline.build_pipeline "
+        "(returns a Pipeline whose .cfg/.params/.apply_full match this "
+        "shim's return)", DeprecationWarning, stacklevel=2)
+    from repro.pipeline import build_pipeline
+
+    p = build_pipeline(name, key, **cfg_overrides)
+    return p.cfg, p.params, p.apply_full

@@ -52,7 +52,7 @@ def init_rf(key, cfg: RFConfig):
 
 
 def rf_apply(params, cfg: RFConfig, g: GeometricGraph,
-             axis_name: Optional[str] = None) -> Array:
+             axis_name: Optional[str] = None, edge_layout=None) -> Array:
     x = g.x
     n = x.shape[0]
     vs = None
@@ -64,7 +64,7 @@ def rf_apply(params, cfg: RFConfig, g: GeometricGraph,
     spec = edge_spec(cfg.coord_clamp)
     for lp in params["layers"]:
         dx, _ = edge_pathway({"phi1": lp["phi"]}, h_empty, x, g, spec,
-                             use_kernel=cfg.use_kernel)
+                             use_kernel=cfg.use_kernel, layout=edge_layout)
         if cfg.n_virtual > 0:
             dx_v, _, vs = virtual_plugin_step(lp["virtual"], h_empty, x, vs,
                                               g.node_mask, axis_name,

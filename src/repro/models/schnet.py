@@ -79,7 +79,8 @@ def init_schnet(key, cfg: SchNetConfig):
 
 
 def schnet_apply(params, cfg: SchNetConfig, g: GeometricGraph,
-                 axis_name: Optional[str] = None) -> tuple[Array, Array]:
+                 axis_name: Optional[str] = None,
+                 edge_layout=None) -> tuple[Array, Array]:
     h = mlp(params["embed"], g.h)
     x = g.x
     vs = None
@@ -99,7 +100,7 @@ def schnet_apply(params, cfg: SchNetConfig, g: GeometricGraph,
         h = h + mlp(lp["out"], agg, act=ssp)
         # Eq. 13: equivariant coordinate head + virtual pathway
         dx, _ = edge_pathway({"phi1": lp["coord"]}, h, x, g, spec,
-                             use_kernel=cfg.use_kernel)
+                             use_kernel=cfg.use_kernel, layout=edge_layout)
         if cfg.n_virtual > 0:
             dx_v, _, vs = virtual_plugin_step(lp["virtual"], h, x, vs,
                                               g.node_mask, axis_name,

@@ -1,0 +1,276 @@
+"""One pipeline API for single-device and DistEGNN training (DESIGN.md §7).
+
+Before this module the two training paths exposed completely different
+surfaces: single-device went ``make_model`` → ``dataset_to_batches`` →
+``trainer.fit`` (paying a trace-time banded regroup per jitted program),
+while DistEGNN went ``FastEGNNConfig`` → ``partition_sample`` /
+``stack_partitions`` → ``build_dist_train_step`` (host layouts, zero
+regroups).  :func:`build_pipeline` collapses both onto one factory:
+
+    pipe = build_pipeline("fast_egnn", key, train_cfg=tc, hidden=64, ...)
+    tr = pipe.make_batches(data[:n], batch_size, r=r)
+    res = pipe.fit(tr, va)                       # single-device vmap path
+
+    pipe = build_pipeline("fast_egnn", key, mesh=make_gnn_mesh(4), ...)
+    tr = pipe.make_batches(data[:n], batch_size, r=r)   # ShardedBatch list
+    res = pipe.fit(tr, va)                       # shard_map DistEGNN path
+
+Either way the batches carry host-precomputed banded-CSR layouts, so with
+``use_kernel=True`` the fused Pallas edge kernel dispatches with **zero
+trace-time regroups** on both paths — ``pipe.dispatch_report()`` exposes
+the trace-time telemetry proving it.
+"""
+from __future__ import annotations
+
+import time
+import warnings
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import message_passing as mp
+from repro.models.registry import resolve_model
+from repro.training.optim import Adam
+from repro.training.trainer import FitResult, TrainConfig
+
+Array = jax.Array
+
+
+class Pipeline:
+    """A model + its training machinery behind one uniform surface.
+
+    Attributes: ``name``, ``cfg``, ``params``, ``apply_full`` (the registry
+    apply — ``(params, cfg, g, axis_name=None, edge_layout=None)``),
+    ``mesh`` (None ⇒ single-device vmap trainer), ``train_cfg``, ``opt``.
+
+    Methods (identical call shapes on both paths):
+      * :meth:`make_batches` — raw samples → layout-carrying batches
+        (``GraphBatch`` / ``ShardedBatch``);
+      * :meth:`train_step` / :meth:`eval_step` — jitted step functions,
+        ``train_step(params, opt_state, batch, key=None)`` →
+        ``(params, opt_state, metrics dict)``, ``eval_step(params, batch)``
+        → scalar;
+      * :meth:`fit` — epochs + validation early stopping (the paper's
+        protocol), returns :class:`~repro.training.trainer.FitResult` and
+        updates ``self.params`` to the best found;
+      * :meth:`predict` — batch-level jitted forward → predicted coords;
+      * :meth:`dispatch_report` — trace-time edge-dispatch telemetry.
+    """
+
+    def __init__(self, name: str, cfg: Any, params: Any, apply_full: Callable,
+                 mesh, train_cfg: TrainConfig):
+        self.name = name
+        self.cfg = cfg
+        self.params = params
+        self.apply_full = apply_full
+        self.mesh = mesh
+        self.train_cfg = train_cfg
+        self.opt = Adam(lr=train_cfg.lr, weight_decay=train_cfg.weight_decay,
+                        grad_clip=train_cfg.grad_clip)
+        self._steps = None
+        self._predict = None
+
+    # ------------------------------------------------------------- batches
+    def make_batches(self, samples, batch_size: int, *, r: float = np.inf,
+                     drop_rate: float = 0.0, partition: str = "random",
+                     shuffle_seed: Optional[int] = None,
+                     with_layout: Optional[bool] = None) -> list:
+        """Raw samples → fixed-shape, layout-carrying batches.
+
+        Single-device: ``data.loader.dataset_to_batches`` (GraphBatch with
+        the stacked host banded layout; the trailing partial batch is
+        mask-padded, never dropped).  Distributed: per-sample
+        ``partition_sample`` (strategy = ``partition``) stacked into
+        ``ShardedBatch``es; trailing samples short of a full batch are
+        dropped with a warning (the shard_map program is fixed-shape and
+        carries no sample mask).
+
+        ``with_layout`` defaults to this pipeline's ``cfg.use_kernel``:
+        only the fused kernel reads the host layout, so layout-free
+        configs skip the numpy layout pass and its device arrays.  On the
+        mesh path layouts are structural ``ShardedBatch`` fields and
+        always built.
+        """
+        from repro.data.loader import dataset_to_batches, sample_h
+
+        if with_layout is None:
+            with_layout = bool(getattr(self.cfg, "use_kernel", False))
+        if self.mesh is None:
+            return dataset_to_batches(
+                samples, batch_size, r=r, drop_rate=drop_rate,
+                shuffle_seed=shuffle_seed, with_layout=with_layout)
+        from repro.data.partition import partition_sample
+        from repro.distributed.dist_egnn import stack_partitions
+
+        samples = list(samples)
+        if shuffle_seed is not None:
+            np.random.default_rng(shuffle_seed).shuffle(samples)
+        d = self.mesh.devices.size
+        batches = []
+        for i in range(0, len(samples) - batch_size + 1, batch_size):
+            pgs = [partition_sample(s.x0, s.v0, sample_h(s), s.x1, d=d, r=r,
+                                    strategy=partition, drop_rate=drop_rate,
+                                    seed=j)
+                   for j, s in enumerate(samples[i : i + batch_size])]
+            batches.append(stack_partitions(pgs))
+        rem = len(samples) % batch_size
+        if rem:
+            warnings.warn(
+                f"make_batches(mesh): dropping the trailing {rem} samples "
+                f"(< batch_size={batch_size}; the sharded program has no "
+                f"sample mask)", stacklevel=2)
+        return batches
+
+    # --------------------------------------------------------------- steps
+    def _build_steps(self):
+        if self._steps is not None:
+            return self._steps
+        tc = self.train_cfg
+        if self.mesh is None:
+            from repro.training.trainer import build_train_step
+
+            step, ev = build_train_step(self.apply_full, self.cfg, tc,
+                                        self.opt)
+
+            def train_step(params, opt_state, batch, key=None):
+                if key is None:
+                    key = jax.random.PRNGKey(tc.seed)
+                return step(params, opt_state, batch, key)
+
+            self._steps = (train_step, ev)
+        else:
+            from repro.distributed.dist_egnn import build_dist_train_step
+
+            step, loss_fn = build_dist_train_step(
+                self.cfg, self.mesh, self.opt, lam_mmd=tc.lam_mmd,
+                mmd_sigma=tc.mmd_sigma)
+
+            def train_step(params, opt_state, batch, key=None):
+                params, opt_state, loss = step(params, opt_state, batch)
+                return params, opt_state, {"loss": loss}
+
+            self._steps = (train_step, loss_fn)
+        return self._steps
+
+    @property
+    def train_step(self) -> Callable:
+        """Jitted ``(params, opt_state, batch, key=None)`` →
+        ``(params, opt_state, metrics)`` — metrics always has ``"loss"``."""
+        return self._build_steps()[0]
+
+    @property
+    def eval_step(self) -> Callable:
+        """Jitted ``(params, batch)`` → scalar validation metric (masked
+        MSE on the single-device path; the Eq. 18 objective — MSE + λ·MMD
+        — on the distributed path, whose loss_fn is the parity anchor)."""
+        return self._build_steps()[1]
+
+    # ------------------------------------------------------------- forward
+    def predict(self, params, batch) -> Array:
+        """Batch-level jitted forward → predicted coordinates
+        ((B, N, 3) single-device / (D, B, n_cap, 3) distributed)."""
+        if self._predict is None:
+            if self.mesh is None:
+
+                def one(params, g, lay):
+                    if lay is None:
+                        return self.apply_full(params, self.cfg, g)[0]
+                    return self.apply_full(params, self.cfg, g,
+                                           edge_layout=lay)[0]
+
+                self._predict = jax.jit(jax.vmap(one, in_axes=(None, 0, 0)))
+            else:
+                from repro.distributed.dist_egnn import build_dist_apply
+
+                dist_apply = build_dist_apply(self.cfg, self.mesh)
+                self._predict = lambda p, sb: dist_apply(p, sb)[0]
+        if self.mesh is None:
+            return self._predict(params, batch.graph,
+                                 getattr(batch, "layout", None))
+        return self._predict(params, batch)
+
+    # ----------------------------------------------------------------- fit
+    def fit(self, train_batches, val_batches, verbose: bool = False) -> FitResult:
+        """Epochs + validation-based early stopping on either path.
+
+        Single-device delegates to ``trainer.fit`` (bit-identical to the
+        pre-pipeline protocol); distributed runs the same epoch/early-stop
+        loop over ``build_dist_train_step``.  Updates ``self.params`` to
+        the best validation params and returns the :class:`FitResult`.
+        """
+        tc = self.train_cfg
+        if self.mesh is None:
+            from repro.training.trainer import fit as _fit
+
+            res = _fit(self.apply_full, self.cfg, self.params, train_batches,
+                       val_batches, tc, verbose=verbose)
+            self.params = res.params
+            return res
+        step, eval_step = self._build_steps()
+        params, opt_state = self.params, self.opt.init(self.params)
+        best_val, best_params, patience = float("inf"), params, 0
+        history = []
+        t0 = time.time()
+        for epoch in range(tc.epochs):
+            ep_loss = 0.0
+            for b in train_batches:
+                params, opt_state, m = step(params, opt_state, b)
+                ep_loss += float(m["loss"])
+            ep_loss /= max(len(train_batches), 1)
+            if val_batches:
+                val = float(jnp.mean(jnp.stack(
+                    [eval_step(params, b) for b in val_batches])))
+            else:  # no held-out shards: fall back to the train objective
+                val = ep_loss
+            history.append({"epoch": epoch, "train_loss": ep_loss,
+                            "val_mse": val})
+            if verbose:
+                print(f"epoch {epoch}: train {ep_loss:.5f} val {val:.5f}",
+                      flush=True)
+            if val < best_val:
+                best_val, best_params, patience = val, params, 0
+            else:
+                patience += 1
+                if patience >= tc.early_stop:
+                    break
+        self.params = best_params
+        return FitResult(params=best_params, best_val=best_val,
+                         history=history, wall_time=time.time() - t0)
+
+    # ----------------------------------------------------------- telemetry
+    def dispatch_report(self) -> dict:
+        """Snapshot of the trace-time edge-dispatch telemetry
+        (``core.message_passing.dispatch_counts``) plus the derived
+        ``dispatch_mode`` classification for this pipeline's config.
+        Counts accumulate per *trace*: ``mp.reset_dispatch_counts()``
+        before building a fresh program to observe its decisions.
+        """
+        counts = mp.dispatch_counts()
+        backend = "tpu" if jax.default_backend() == "tpu" else "interpret"
+        use_kernel = bool(getattr(self.cfg, "use_kernel", False))
+        return dict(counts=counts, use_kernel=use_kernel,
+                    mode=mp.dispatch_mode(counts, use_kernel, backend))
+
+
+def build_pipeline(name: str, key, *, mesh=None,
+                   train_cfg: Optional[TrainConfig] = None,
+                   **cfg_overrides) -> Pipeline:
+    """The single factory behind every training entry point (DESIGN.md §7).
+
+    ``mesh=None`` → the vmap single-device trainer over layout-carrying
+    ``GraphBatch``es; ``mesh=Mesh(...)`` (e.g. ``make_gnn_mesh(d)``) → the
+    ``shard_map`` DistEGNN path over ``ShardedBatch``es.  ``train_cfg``
+    seeds the optimiser and fit protocol (default :class:`TrainConfig`);
+    ``**cfg_overrides`` go to the registry's config composition exactly as
+    ``make_model``'s did.
+    """
+    train_cfg = train_cfg if train_cfg is not None else TrainConfig()
+    if mesh is not None and name != "fast_egnn":
+        raise ValueError(
+            f"build_pipeline(mesh=...) implements DistEGNN (Sec. VI), which "
+            f"is FastEGNN under graph-partition shard_map — got model "
+            f"{name!r}; pass name='fast_egnn' or mesh=None")
+    cfg, params, apply_full = resolve_model(name, key, **cfg_overrides)
+    return Pipeline(name, cfg, params, apply_full, mesh, train_cfg)

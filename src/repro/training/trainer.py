@@ -4,7 +4,16 @@ Builds a jitted ``train_step`` (vmap over the batch dim), runs epochs with
 validation-based early stopping — the paper's protocol (Table IX) at
 configurable scale.  The distributed (DistEGNN) loop lives in
 ``repro/distributed/dist_egnn.py``; this trainer drives the single-device
-models and the plug-in variants.
+models and the plug-in variants (both uniformly exposed through
+``repro.pipeline.build_pipeline`` — DESIGN.md §7).
+
+Batch contract: batches are ``data.loader.GraphBatch``.  When a batch
+carries a host-precomputed banded ``layout``, it is vmapped alongside the
+graph into ``apply_full(..., edge_layout=...)`` so the fused edge kernel
+skips its trace-time regroup (``dispatch_counts()['edge_layout_host']``);
+layout-free batches keep the legacy ``apply_full(params, cfg, g)`` call so
+external applies without the kwarg still work.  A batch ``sample_mask``
+(mask-padded trailing partial batch) weights every loss/metric.
 """
 from __future__ import annotations
 
@@ -13,6 +22,7 @@ from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.training.losses import combined_objective
 from repro.training.optim import Adam, AdamState
@@ -32,11 +42,28 @@ class TrainConfig(NamedTuple):
     seed: int = 0
 
 
+def _batch_mean(values, sample_mask):
+    """Mean over batch slots, weighted by the sample mask when present
+    (mask-padded partial batches must not distort metrics)."""
+    if sample_mask is None:
+        return jax.tree.map(jnp.mean, values)
+    w = sample_mask / jnp.maximum(jnp.sum(sample_mask), 1.0)
+    return jax.tree.map(lambda v: jnp.sum(v * w), values)
+
+
+def _apply(apply_full: Callable, params, cfg_model, g, lay):
+    # layout-free batches keep the 3-arg call so external apply_fulls
+    # without the edge_layout kwarg keep working (lay is trace-static)
+    if lay is None:
+        return apply_full(params, cfg_model, g)
+    return apply_full(params, cfg_model, g, edge_layout=lay)
+
+
 def build_train_step(apply_full: Callable, cfg_model, tc: TrainConfig, opt: Adam):
     """Returns jitted (params, opt_state, batch, key) → (params, opt_state, metrics)."""
 
-    def per_sample_loss(params, g, x_target, key):
-        x_pred, aux = apply_full(params, cfg_model, g)
+    def per_sample_loss(params, g, x_target, key, lay):
+        x_pred, aux = _apply(apply_full, params, cfg_model, g, lay)
         z = aux.get("virtual").z if "virtual" in aux else None
         loss, parts = combined_objective(
             x_pred, x_target, g.node_mask, z,
@@ -47,10 +74,12 @@ def build_train_step(apply_full: Callable, cfg_model, tc: TrainConfig, opt: Adam
     def batch_loss(params, batch, key):
         b = batch.graph.x.shape[0]
         keys = jax.random.split(key, b)
-        losses, parts = jax.vmap(per_sample_loss, in_axes=(None, 0, 0, 0))(
-            params, batch.graph, batch.x_target, keys
+        losses, parts = jax.vmap(per_sample_loss, in_axes=(None, 0, 0, 0, 0))(
+            params, batch.graph, batch.x_target, keys,
+            getattr(batch, "layout", None),
         )
-        return jnp.mean(losses), jax.tree.map(jnp.mean, parts)
+        sm = getattr(batch, "sample_mask", None)
+        return _batch_mean(losses, sm), _batch_mean(parts, sm)
 
     @jax.jit
     def train_step(params, opt_state, batch, key):
@@ -62,12 +91,14 @@ def build_train_step(apply_full: Callable, cfg_model, tc: TrainConfig, opt: Adam
 
     @jax.jit
     def eval_step(params, batch):
-        def mse_one(g, x_target):
-            x_pred, _ = apply_full(params, cfg_model, g)
+        def mse_one(g, x_target, lay):
+            x_pred, _ = _apply(apply_full, params, cfg_model, g, lay)
             err = jnp.sum((x_pred - x_target) ** 2, axis=-1) * g.node_mask
             return jnp.sum(err) / jnp.maximum(jnp.sum(g.node_mask), 1.0) / 3.0
 
-        return jnp.mean(jax.vmap(mse_one)(batch.graph, batch.x_target))
+        mses = jax.vmap(mse_one)(batch.graph, batch.x_target,
+                                 getattr(batch, "layout", None))
+        return _batch_mean(mses, getattr(batch, "sample_mask", None))
 
     return train_step, eval_step
 
@@ -77,6 +108,17 @@ class FitResult(NamedTuple):
     best_val: float
     history: list
     wall_time: float
+
+
+def batch_weight(batch) -> float:
+    """Number of *real* samples in a batch — the weight of its per-batch
+    mean in any across-batch aggregate.  Equal-weight averaging would let
+    the mask-padded trailing partial batch over-weight its few real
+    samples by batch_size/rem."""
+    sm = getattr(batch, "sample_mask", None)
+    if sm is None:
+        return float(batch.graph.x.shape[0])
+    return float(jnp.sum(sm))
 
 
 def fit(
@@ -95,15 +137,23 @@ def fit(
     best_val, best_params, patience = float("inf"), params, 0
     history = []
     t0 = time.time()
+    tr_w = [batch_weight(b) for b in train_batches]
+    va_w = [batch_weight(b) for b in val_batches]
     for epoch in range(tc.epochs):
         key, sub = jax.random.split(key)
         ep_loss = 0.0
-        for batch in train_batches:
+        for batch, w in zip(train_batches, tr_w):
             sub, k = jax.random.split(sub)
             params, opt_state, parts = train_step(params, opt_state, batch, k)
-            ep_loss += float(parts["loss"])
-        val = float(jnp.mean(jnp.stack([eval_step(params, b) for b in val_batches])))
-        history.append({"epoch": epoch, "train_loss": ep_loss / max(len(train_batches), 1), "val_mse": val})
+            ep_loss += float(parts["loss"]) * w
+        # sample-weighted across batches: per-batch means already exclude
+        # mask-padded slots, so weighting by real count makes the epoch
+        # aggregates exact per-sample means
+        val = float(np.average([float(eval_step(params, b))
+                                for b in val_batches], weights=va_w))
+        history.append({"epoch": epoch,
+                        "train_loss": ep_loss / max(sum(tr_w), 1.0),
+                        "val_mse": val})
         if verbose:
             print(f"epoch {epoch}: train {history[-1]['train_loss']:.5f} val {val:.5f}")
         if val < best_val:

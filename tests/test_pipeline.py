@@ -1,0 +1,249 @@
+"""Pipeline-API contract tests (DESIGN.md §7).
+
+Covers the layout-carrying batch contract (host banded layouts riding
+``GraphBatch`` into the fused kernel with zero trace-time regroups on the
+*single-device* path), the loader's re-pad + partial-batch semantics, the
+``build_pipeline`` factory's parity with the pre-refactor
+``make_model`` + ``trainer.fit`` surface, and the deprecated shim.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import message_passing as mp
+from repro.data.loader import (GraphBatch, attach_layout, dataset_to_batches,
+                               make_batch, repad_arrays, sample_to_arrays)
+from repro.data.nbody import generate_nbody_dataset
+from repro.pipeline import build_pipeline
+from repro.training.optim import Adam
+from repro.training.trainer import TrainConfig, build_train_step, fit
+
+KW = dict(h_in=1, n_layers=2, hidden=16, n_virtual=2, s_dim=8)
+
+
+def _data(n_samples=8, n_nodes=24, seed=0):
+    return generate_nbody_dataset(n_samples, n_nodes=n_nodes, seed=seed)
+
+
+# --------------------------------------------------------- loader contract
+def test_batches_carry_host_layouts():
+    """Every batch carries the stacked EdgeLayout, and each sample's slice
+    equals a fresh host layout over its padded edge arrays."""
+    from repro.data.radius_graph import banded_csr_layout
+    from repro.kernels.edge_message import LayoutMeta, pick_windows
+
+    data = _data(4)
+    batches = dataset_to_batches(data, 2, drop_rate=0.5)
+    assert len(batches) == 2
+    for b in batches:
+        lay = b.layout
+        assert lay is not None
+        bsz, cap = lay.senders.shape
+        assert bsz == b.graph.x.shape[0] and cap % 128 == 0
+        assert lay.block_rwin.shape == (bsz, cap // 128)
+        w, sw, n_pad = pick_windows(b.graph.x.shape[1])
+        assert lay.meta == LayoutMeta(w, sw, n_pad, 128)
+        for i in range(bsz):
+            fresh = banded_csr_layout(
+                np.asarray(b.graph.senders[i]), np.asarray(b.graph.receivers[i]),
+                b.graph.x.shape[1], edge_mask=np.asarray(b.graph.edge_mask[i]))
+            np.testing.assert_array_equal(np.asarray(lay.senders[i]),
+                                          fresh.senders)
+            np.testing.assert_array_equal(np.asarray(lay.block_rwin[i]),
+                                          fresh.block_rwin)
+            np.testing.assert_array_equal(np.asarray(lay.edge_mask[i]),
+                                          fresh.edge_mask)
+            # every real edge survives the regrouping
+            assert float(lay.edge_mask[i].sum()) == float(
+                b.graph.edge_mask[i].sum())
+
+
+def test_repad_matches_full_rebuild():
+    """Satellite: growing a sample's padded arrays to the dataset cap must
+    equal the old second ``sample_to_arrays`` pass at that cap."""
+    data = _data(3, n_nodes=20)
+    # different drop rates per sample force differing edge counts
+    small = sample_to_arrays(data[0].x0, data[0].v0, data[0].charges,
+                             data[0].x1, drop_rate=0.6)
+    big_cap = small["senders"].shape[0] + 64
+    repadded = repad_arrays(small, small["x"].shape[0], big_cap)
+    rebuilt = sample_to_arrays(data[0].x0, data[0].v0, data[0].charges,
+                               data[0].x1, drop_rate=0.6, edge_cap=big_cap)
+    for k in rebuilt:
+        np.testing.assert_array_equal(repadded[k], rebuilt[k], err_msg=k)
+
+
+def test_partial_batch_masked_not_dropped():
+    """Satellite: trailing samples become a mask-padded partial batch whose
+    metrics and gradients match a plain batch of only the real samples."""
+    data = _data(6)
+    batches = dataset_to_batches(data, 4)
+    assert len(batches) == 2  # old behaviour: 1 (trailing 2 dropped)
+    part = batches[-1]
+    assert part.graph.x.shape[0] == 4
+    np.testing.assert_array_equal(np.asarray(part.sample_mask), [1, 1, 0, 0])
+    assert batches[0].sample_mask is None
+
+    tc = TrainConfig(lam_mmd=0.0, lr=1e-3)
+    pipe = build_pipeline("fast_egnn", jax.random.PRNGKey(0), train_cfg=tc,
+                          **KW)
+    opt = Adam(lr=tc.lr, weight_decay=tc.weight_decay, grad_clip=tc.grad_clip)
+    step, eval_step = build_train_step(pipe.apply_full, pipe.cfg, tc, opt)
+    # reference: the same 2 real samples as their own (unpadded) batch
+    ref = dataset_to_batches(data[4:], 2)[0]
+    st = opt.init(pipe.params)
+    key = jax.random.PRNGKey(1)
+    p_part, _, m_part = step(pipe.params, st, part, key)
+    p_ref, _, m_ref = step(pipe.params, st, ref, key)
+    np.testing.assert_allclose(float(m_part["loss"]), float(m_ref["loss"]),
+                               rtol=1e-6)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-7), p_part, p_ref)
+    np.testing.assert_allclose(float(eval_step(pipe.params, part)),
+                               float(eval_step(pipe.params, ref)), rtol=1e-6)
+    # across-batch aggregates weight by real count, not per-batch means —
+    # the partial batch must not over-weight its 2 real samples
+    from repro.training.trainer import batch_weight
+    assert [batch_weight(b) for b in batches] == [4.0, 2.0]
+
+
+def test_drop_last_warns_with_count():
+    with pytest.warns(UserWarning, match="dropping the trailing 2"):
+        batches = dataset_to_batches(_data(6), 4, drop_last=True)
+    assert len(batches) == 1
+
+
+def test_make_batch_without_layout_roundtrips():
+    """Layout-free arrays (e.g. the rollout bench's hand-built samples)
+    still batch — layout is simply None."""
+    s = _data(1)[0]
+    arr = sample_to_arrays(s.x0, s.v0, s.charges, s.x1)
+    b = make_batch([arr])
+    assert isinstance(b, GraphBatch) and b.layout is None
+    assert b.graph.x.shape[0] == 1
+
+
+# ------------------------------------------------- trainer layout parity
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_trainer_layout_vs_layout_free_parity(use_kernel):
+    """Acceptance criterion: layout-carrying and layout-free batches give
+    identical loss/grad (= identical updated params) through
+    ``trainer.build_train_step``, on both edge-pathway modes — the host
+    layout and the trace-time regroup are the same banded arrays."""
+    data = _data(4)
+    tc = TrainConfig(lam_mmd=0.03)
+    pipe = build_pipeline("fast_egnn", jax.random.PRNGKey(0), train_cfg=tc,
+                          use_kernel=use_kernel, **KW)
+    with_lay = dataset_to_batches(data, 2, drop_rate=0.5, with_layout=True)
+    no_lay = dataset_to_batches(data, 2, drop_rate=0.5, with_layout=False)
+    opt = Adam(lr=tc.lr)
+    step, eval_step = build_train_step(pipe.apply_full, pipe.cfg, tc, opt)
+    st = opt.init(pipe.params)
+    key = jax.random.PRNGKey(2)
+    # one epoch over both variants: identical metrics + updated params
+    p_a, p_b = pipe.params, pipe.params
+    st_a, st_b = st, st
+    for ba, bb in zip(with_lay, no_lay):
+        p_a, st_a, m_a = step(p_a, st_a, ba, key)
+        p_b, st_b, m_b = step(p_b, st_b, bb, key)
+        np.testing.assert_allclose(float(m_a["loss"]), float(m_b["loss"]),
+                                   rtol=1e-5)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-6), p_a, p_b)
+    np.testing.assert_allclose(float(eval_step(p_a, with_lay[0])),
+                               float(eval_step(p_b, no_lay[0])), rtol=1e-5)
+
+
+def test_single_device_fit_dispatches_host_layouts():
+    """Acceptance criterion: single-device ``fit`` with use_kernel=True
+    records ``edge_layout_host > 0`` and ``edge_layout_regroup == 0`` —
+    the fast path is the default path, asserted via telemetry."""
+    data = _data(6)
+    tc = TrainConfig(epochs=1, lam_mmd=0.03)
+    pipe = build_pipeline("fast_egnn", jax.random.PRNGKey(0), train_cfg=tc,
+                          use_kernel=True, **KW)
+    tr = pipe.make_batches(data[:4], 2)
+    va = pipe.make_batches(data[4:], 2)
+    mp.reset_dispatch_counts()
+    res = pipe.fit(tr, va)
+    counts = mp.dispatch_counts()
+    assert counts.get("edge_kernel", 0) > 0, counts
+    assert counts.get("edge_layout_host", 0) > 0, counts
+    assert counts.get("edge_layout_regroup", 0) == 0, counts
+    report = pipe.dispatch_report()
+    assert report["mode"] in ("interpret", "tpu"), report
+    assert np.isfinite(res.best_val)
+
+
+# ----------------------------------------------------- factory + shim
+def test_pipeline_fit_matches_prerefactor_fit():
+    """``build_pipeline(mesh=None).fit`` reproduces the pre-refactor
+    ``make_model`` + ``trainer.fit`` protocol on a fixed seed."""
+    data = _data(8)
+    tc = TrainConfig(epochs=2, lam_mmd=0.03, seed=0)
+    pipe = build_pipeline("fast_egnn", jax.random.PRNGKey(0), train_cfg=tc,
+                          **KW)
+    tr = pipe.make_batches(data[:6], 2)
+    va = pipe.make_batches(data[6:], 2)
+    res_new = pipe.fit(tr, va)
+    with pytest.warns(DeprecationWarning):
+        from repro.models.registry import make_model
+
+        cfg, params, apply_full = make_model("fast_egnn",
+                                             jax.random.PRNGKey(0), **KW)
+    res_old = fit(apply_full, cfg, params, tr, va, tc)
+    assert [h["epoch"] for h in res_old.history] == \
+        [h["epoch"] for h in res_new.history]
+    for ho, hn in zip(res_old.history, res_new.history):
+        np.testing.assert_allclose(ho["train_loss"], hn["train_loss"],
+                                   rtol=1e-6)
+        np.testing.assert_allclose(ho["val_mse"], hn["val_mse"], rtol=1e-6)
+    # fit updates the pipeline's params to the best found
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), pipe.params, res_new.params)
+
+
+def test_make_model_shim_matches_build_pipeline():
+    """Satellite: the deprecated shim returns exactly the factory's
+    (cfg, params, apply_full) and stays functional."""
+    from repro.models.registry import make_model
+
+    with pytest.warns(DeprecationWarning, match="build_pipeline"):
+        cfg, params, apply_full = make_model("egnn", jax.random.PRNGKey(3),
+                                             h_in=1, n_layers=2, hidden=8)
+    pipe = build_pipeline("egnn", jax.random.PRNGKey(3), h_in=1, n_layers=2,
+                          hidden=8)
+    assert cfg == pipe.cfg
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), params, pipe.params)
+    assert apply_full is pipe.apply_full
+    b = dataset_to_batches(_data(2), 2)[0]
+    x, aux = apply_full(params, cfg, jax.tree.map(lambda a: a[0], b.graph))
+    assert x.shape == (24, 3)
+
+
+def test_build_pipeline_mesh_requires_fast_egnn():
+    class FakeMesh:  # never touched before the name check
+        pass
+
+    with pytest.raises(ValueError, match="fast_egnn"):
+        build_pipeline("egnn", jax.random.PRNGKey(0), mesh=FakeMesh(),
+                       h_in=1)
+
+
+def test_predict_batch_forward():
+    data = _data(3)
+    pipe = build_pipeline("egnn", jax.random.PRNGKey(0), h_in=1, n_layers=2,
+                          hidden=8)
+    b = pipe.make_batches(data, 3)[0]
+    x = pipe.predict(pipe.params, b)
+    assert x.shape == b.graph.x.shape
+    # matches the raw apply on sample 0
+    x0, _ = pipe.apply_full(pipe.params, pipe.cfg,
+                            jax.tree.map(lambda a: a[0], b.graph))
+    # vmapped vs single-sample compilation: float reassociation only
+    np.testing.assert_allclose(np.asarray(x[0]), np.asarray(x0),
+                               rtol=1e-4, atol=1e-5)
