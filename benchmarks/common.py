@@ -35,10 +35,13 @@ def get_dataset(kind: str, n_samples: int, n_nodes: int, seed: int = 0):
 
 
 def time_inference(apply_full, cfg, params, batches, reps: int = 3) -> float:
-    """Mean µs per batch element of the jitted forward."""
+    """Mean µs per batch element of the jitted forward.  ``batches`` is any
+    batch source (eager list or ``BatchStream``) — materialized up front so
+    the timing covers the jitted forward only, never host collate/H2D
+    (keeps rows comparable with pre-stream recordings)."""
+    batches = list(batches)
     fn = jax.jit(lambda p, g: apply_full(p, cfg, g)[0])
-    # warmup
-    for b in batches[:1]:
+    for b in batches[:1]:  # warmup
         jax.block_until_ready(jax.vmap(fn, in_axes=(None, 0))(params, b.graph))
     t0 = time.perf_counter()
     n = 0
@@ -51,10 +54,13 @@ def time_inference(apply_full, cfg, params, batches, reps: int = 3) -> float:
 
 def train_and_eval(model: str, data, r, h_in, *, drop_rate=0.0, n_virtual=3,
                    epochs=25, batch=8, hidden=32, n_layers=3, lam_mmd=0.0,
-                   seed=0, shared_virtual=False, lr=1e-3, **extra):
+                   seed=0, shared_virtual=False, lr=1e-3, cache_dir=None,
+                   **extra):
     """Quick-training protocol shared by the table benchmarks (scaled-down
     version of the paper's Table IX hyperparameters), on the one pipeline
-    API (DESIGN.md §7): layout-carrying batches + ``pipe.fit``."""
+    API (DESIGN.md §7): layout-carrying ``BatchStream``s + ``pipe.fit``
+    (epochs re-iterate the streams; ``cache_dir`` persists banded layouts
+    across bench runs — DESIGN.md §8)."""
     n_tr = int(0.75 * len(data))
     kw = dict(h_in=h_in, n_layers=n_layers, hidden=hidden)
     if model == "linear":
@@ -74,8 +80,10 @@ def train_and_eval(model: str, data, r, h_in, *, drop_rate=0.0, n_virtual=3,
     tc = TrainConfig(lr=lr, grad_clip=1.0, epochs=epochs, lam_mmd=lam_mmd,
                      early_stop=max(5, epochs // 3), seed=seed)
     pipe = build_pipeline(model, jax.random.PRNGKey(seed), train_cfg=tc, **kw)
-    tr = pipe.make_batches(data[:n_tr], batch, r=r, drop_rate=drop_rate)
-    va = pipe.make_batches(data[n_tr:], batch, r=r, drop_rate=drop_rate)
+    tr = pipe.make_batches(data[:n_tr], batch, r=r, drop_rate=drop_rate,
+                           cache_dir=cache_dir)
+    va = pipe.make_batches(data[n_tr:], batch, r=r, drop_rate=drop_rate,
+                           cache_dir=cache_dir)
     res = pipe.fit(tr, va)
     t_inf = time_inference(pipe.apply_full, pipe.cfg, res.params, va)
     return res.best_val, t_inf

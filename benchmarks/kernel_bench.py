@@ -24,6 +24,7 @@ CLI::
         [--dist D]            # also record dist_kernel_mode rows (D shards)
         [--gate-dist]         # exit 1 unless the dist fused row dispatched
         [--gate-single-dispatch]  # same gate for the single-device pipeline
+        [--gate-input-pipeline]   # exit 1 if a warm layout cache rebuilds
 
 ``--gate-eligible`` is the CI regression gate for the banded-CSR tiling:
 it fails the bench-smoke job if the fused path ever loses eligibility at
@@ -96,7 +97,9 @@ def run_edge(quick: bool = True, deg: int = 8, hid: int = 64,
     quick runs don't overwrite the committed artifact unless ``json_path``
     is given explicitly.
     """
-    on_tpu = jax.default_backend() == "tpu"
+    from repro.kernels.runtime import backend_mode, default_interpret
+
+    on_tpu = not default_interpret()
     if sizes is None:
         sizes = (1024,) if quick else FULL_SIZES
     spec = mp.EdgeSpec(coord_clamp=100.0)
@@ -120,7 +123,7 @@ def run_edge(quick: bool = True, deg: int = 8, hid: int = 64,
             lp, h, x, g, spec)), lp, h, x)
         t_kernel, mode = None, "ineligible"
         if eligible:
-            mode = "tpu" if on_tpu else "interpret"
+            mode = backend_mode()
             # interpret emulation is orders slower than compiled jnp: one
             # rep keeps the 64K row affordable while still recording a
             # real execution of the banded tiling
@@ -174,7 +177,8 @@ pgs = [partition_sample(s.x0, s.v0, s.h, s.x1, d=D, r=0.05, seed=j)
        for j, s in enumerate(data)]
 sb = stack_partitions(pgs)
 mesh = make_gnn_mesh(D)
-backend_mode = "tpu" if jax.default_backend() == "tpu" else "interpret"
+from repro.kernels.runtime import backend_mode as _bm
+backend_mode = _bm()
 rows = []
 for use_kernel in (False, True):
     cfg = FastEGNNConfig(n_layers=2, hidden=32, h_in=1, n_virtual=3,
@@ -230,6 +234,86 @@ def run_dist(d: int = 2, n: int = 512, source: str = "kernel_bench") -> list[dic
     return rows
 
 
+def run_input_pipeline(n: int = 32, n_samples: int = 16, batch: int = 4,
+                       source: str = "kernel_bench") -> tuple[list[dict], bool]:
+    """Streaming-data-plane rows + the warm-layout-cache gate (DESIGN.md §8).
+
+    Cold-vs-warm: the same dataset is built twice through ``BatchStream``
+    against one on-disk layout-cache dir — the cold pass populates it, the
+    warm pass must perform **zero** host layout rebuilds.  That is
+    telemetry-counted (``layout_cache.cache_stats()['builds']``), not
+    inferred from timings, and is what the CI ``--gate-input-pipeline``
+    asserts.  Prefetch-overlap: one training epoch consuming a fresh
+    stream (host build in background workers + double-buffered H2D,
+    overlapping the jitted steps) is timed against the same epoch over the
+    eagerly materialized list; both rows land in ``BENCH_edge_kernel.json``
+    (``kind='input_pipeline'``) for trajectory tracking.
+    """
+    import shutil
+    import tempfile
+
+    from repro.data import layout_cache as lc
+    from repro.data.nbody import generate_nbody_dataset
+    from repro.data.stream import BatchStream
+    from repro.pipeline import build_pipeline
+    from repro.training.trainer import TrainConfig
+
+    data = generate_nbody_dataset(n_samples, n_nodes=n, seed=0)
+    cache_dir = tempfile.mkdtemp(prefix="repro_layout_cache_")
+    try:
+        lc.reset_cache_stats()
+        t0 = time.perf_counter()
+        BatchStream(data, batch, cache_dir=cache_dir).materialize()
+        cold_s = time.perf_counter() - t0
+        cold = lc.cache_stats()
+        lc.reset_cache_stats()
+        t0 = time.perf_counter()
+        BatchStream(data, batch, cache_dir=cache_dir).materialize()
+        warm_s = time.perf_counter() - t0
+        warm = lc.cache_stats()
+    finally:
+        shutil.rmtree(cache_dir, ignore_errors=True)
+    ok = (cold["builds"] > 0 and warm["builds"] == 0 and warm["hits"] > 0)
+
+    # prefetch-overlap throughput: one epoch, stream vs eager list
+    pipe = build_pipeline(
+        "fast_egnn", jax.random.PRNGKey(0),
+        train_cfg=TrainConfig(lam_mmd=0.01),
+        n_layers=2, hidden=32, h_in=1, n_virtual=3, s_dim=16)
+    st = pipe.opt.init(pipe.params)
+    key = jax.random.PRNGKey(0)
+
+    def epoch(src):
+        p, s = pipe.params, st
+        for b in src:
+            p, s, _ = pipe.train_step(p, s, b, key)
+        jax.block_until_ready(p)
+
+    eager = pipe.make_batches(data, batch).materialize()
+    epoch(eager)  # compile the step once, outside both timings
+    t0 = time.perf_counter()
+    epoch(eager)
+    eager_us = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    # a fresh stream: the full host build (radius graphs, layouts, collate)
+    # runs in background workers while the epoch's steps consume
+    epoch(pipe.make_batches(data, batch))
+    stream_us = (time.perf_counter() - t0) * 1e6
+
+    row = dict(kind="input_pipeline", source=source, d=1, n=n,
+               n_samples=n_samples, batch=batch,
+               cold_build_s=cold_s, warm_build_s=warm_s,
+               cold_layout_builds=cold["builds"],
+               warm_layout_builds=warm["builds"],
+               warm_layout_hits=warm["hits"],
+               eager_epoch_us=eager_us, stream_epoch_us=stream_us)
+    emit(f"kernel/input_pipeline_n{n}", stream_us,
+         f"eager_us={eager_us:.0f};cold_build_s={cold_s:.3f};"
+         f"warm_build_s={warm_s:.3f};warm_layout_builds={warm['builds']};"
+         f"warm_layout_hits={warm['hits']}")
+    return [row], ok
+
+
 def run_single_dispatch(n: int = 48, n_samples: int = 8, batch: int = 4,
                         source: str = "kernel_bench") -> list[dict]:
     """Single-device host-layout dispatch rows (DESIGN.md §7).
@@ -243,11 +327,12 @@ def run_single_dispatch(n: int = 48, n_samples: int = 8, batch: int = 4,
     """
     from repro.core import message_passing as mp
     from repro.data.nbody import generate_nbody_dataset
+    from repro.kernels.runtime import backend_mode as _backend_mode
     from repro.pipeline import build_pipeline
     from repro.training.trainer import TrainConfig
 
     data = generate_nbody_dataset(n_samples, n_nodes=n, seed=0)
-    backend_mode = "tpu" if jax.default_backend() == "tpu" else "interpret"
+    backend_mode = _backend_mode()
     rows = []
     for use_kernel in (False, True):
         pipe = build_pipeline(
@@ -361,6 +446,11 @@ def main(argv: list[str] | None = None) -> int:
                         "layout-carrying batches and exit 1 unless the fused "
                         "row consumed the host layout with zero trace-time "
                         "regroups (CI gate, DESIGN.md §7)")
+    p.add_argument("--gate-input-pipeline", action="store_true",
+                   help="record cold-vs-warm layout-cache build time and "
+                        "prefetch-overlap throughput rows, and exit 1 if a "
+                        "warm cache run still rebuilds layouts (CI gate, "
+                        "DESIGN.md §8)")
     args = p.parse_args(argv)
 
     sizes = (tuple(int(s) for s in args.sizes.split(","))
@@ -385,6 +475,20 @@ def main(argv: list[str] | None = None) -> int:
             return 1
         print(f"GATE OK: single-device pipeline dispatched via host layouts "
               f"(mode={fused[0]['dispatch_mode']}, regroups=0)")
+
+    if args.gate_input_pipeline:
+        ip_rows, ip_ok = run_input_pipeline()
+        ip_json = args.json or (EDGE_BENCH_JSON if sizes is None else None)
+        if ip_json is not None:
+            record_dist_rows(ip_rows, ip_json)
+        if not ip_ok:
+            print(f"GATE FAILED: warm layout-cache run still rebuilt "
+                  f"layouts: {ip_rows}")
+            return 1
+        r0 = ip_rows[0]
+        print(f"GATE OK: warm layout cache performed zero rebuilds "
+              f"({r0['warm_layout_hits']} hits; cold {r0['cold_build_s']:.3f}s "
+              f"→ warm {r0['warm_build_s']:.3f}s)")
 
     if args.dist is not None:
         dist_rows = run_dist(d=args.dist)

@@ -73,6 +73,8 @@ def run(quick: bool = True):
                          early_stop=max(5, epochs // 3), seed=0)
         pipe = build_pipeline(model, jax.random.PRNGKey(0), train_cfg=tc,
                               h_in=1, n_layers=3, hidden=32, **kw)
+        # BatchStreams (DESIGN.md §8): ``fit`` re-iterates them per epoch,
+        # with the radius-graph/layout build running in background workers
         tr = pipe.make_batches(pairs[:n_tr], 4, r=r, drop_rate=drop)
         va = pipe.make_batches(pairs[n_tr:], 4, r=r, drop_rate=drop)
         res = pipe.fit(tr, va)

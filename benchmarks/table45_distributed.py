@@ -28,6 +28,7 @@ _CHILD = """
 import json, time, jax, numpy as np
 from repro.core import message_passing as mp
 from repro.data.fluid import generate_fluid_dataset
+from repro.data.layout_cache import cache_stats, reset_cache_stats
 from repro.distributed.dist_egnn import make_gnn_mesh
 from repro.pipeline import build_pipeline
 from repro.training.trainer import TrainConfig
@@ -36,11 +37,14 @@ D = {d}
 C = {c}
 data = generate_fluid_dataset({n_samples}, n_particles={n_nodes}, seed=0)
 mp.reset_dispatch_counts()
+reset_cache_stats()
 pipe = build_pipeline("fast_egnn", jax.random.PRNGKey(0),
                       mesh=make_gnn_mesh(D),
                       train_cfg=TrainConfig(lr=5e-4, lam_mmd=0.01),
                       n_layers=3, hidden=32, h_in=1, n_virtual=C, s_dim=32,
                       use_kernel={use_kernel})
+# BatchStream (DESIGN.md §8): the first pass builds + caches the host
+# batches in background workers; the epochs below re-iterate them
 batches = pipe.make_batches(data, {batch}, r={r})
 edges = float(np.mean([b.edge_mask.sum() / D for b in batches]))
 deg = edges / (data[0].x0.shape[0] / D)
@@ -74,7 +78,8 @@ print(json.dumps(dict(d=D, edges_per_dev=edges, avg_degree=deg,
                       mse=float(err), step_s=t_step, workset_dev_bytes=work_set,
                       dist_kernel_mode=mode,
                       regroups=counts.get("edge_layout_regroup", 0),
-                      layout_host=counts.get("edge_layout_host", 0))))
+                      layout_host=counts.get("edge_layout_host", 0),
+                      layout_builds=cache_stats()["builds"])))
 """
 
 
@@ -120,7 +125,8 @@ def run(quick: bool = True, record_bench: bool | None = None):
                 use_kernel=use_kernel,
                 dist_kernel_mode=res["dist_kernel_mode"],
                 step_us=res["step_s"] * 1e6, regroups=res["regroups"],
-                layout_host=res["layout_host"]))
+                layout_host=res["layout_host"],
+                layout_builds=res.get("layout_builds")))
     if record_bench:
         record_dist_rows(dist_rows)
 

@@ -35,11 +35,21 @@ def mmd_loss(
     sigma: float = 1.5,
     sample_size: Optional[int] = None,
     key: Optional[Array] = None,
+    use_kernel: bool = False,
 ) -> Array:
     """Eq. 10.  ``z``: (C,3) virtual coords, ``x``: (N,3) real coords.
 
     When ``sample_size``/``key`` are given, draws that many real nodes
     (with probability ∝ node_mask) for the cross term.
+
+    ``use_kernel`` routes the O(N·C) cross term through the fused Pallas
+    kernel (``kernels.mmd_rbf.mmd_cross_sum`` via the trainable
+    ``kernels.ops.mmd_cross`` wrapper — one HBM pass, nothing materialised
+    but a scalar); the C×C virtual-virtual term stays jnp (negligible).
+    Same ``use_kernel``-style switch as the edge pathway: identical math,
+    parity-tested fwd + grad in ``tests/test_kernels.py``.  The gather for
+    the sampled cross term happens *outside* the kernel, so sampling and
+    the kernel compose.
     """
     c = z.shape[0]
     k_zz = rbf_kernel(z, z, sigma)
@@ -53,7 +63,13 @@ def mmd_loss(
     else:
         xs = x
         w = node_mask
-    k_xz = rbf_kernel(xs, z, sigma)  # (M, C)
     denom = jnp.maximum(jnp.sum(w), 1.0) * c
+    if use_kernel:
+        from repro.core.message_passing import record_dispatch
+        from repro.kernels.ops import mmd_cross
+
+        record_dispatch("mmd_kernel")
+        return term_vv - mmd_cross(xs, z, w, sigma) / denom
+    k_xz = rbf_kernel(xs, z, sigma)  # (M, C)
     term_xv = jnp.sum(k_xz * w[:, None]) / denom
     return term_vv - term_xv

@@ -8,10 +8,16 @@ pipeline threads through ``ShardedBatch`` (§6.6), so ``trainer.fit`` /
 ``build_pipeline(mesh=None)`` dispatch with **zero trace-time regroups**
 exactly like the distributed path.  All samples of a dataset share one
 (node, edge, band) capacity, so one jitted program serves every batch.
+
+Batch *assembly* is split host/device for the streaming data plane
+(DESIGN.md §8): :func:`collate_host` stacks per-sample arrays into a pure
+numpy :class:`HostBatch` (worker-thread safe), :func:`batch_to_device`
+converts it (async — the stream double-buffers the transfer), and
+:func:`make_batch` is their composition.  :func:`dataset_to_batches` is a
+thin materialize-the-stream shim over ``data.stream.BatchStream``.
 """
 from __future__ import annotations
 
-import warnings
 from typing import NamedTuple, Optional, Sequence
 
 import jax
@@ -19,9 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import GeometricGraph
-from repro.data.radius_graph import (banded_csr_layout, drop_longest_edges,
-                                     pad_edges, pad_nodes, radius_graph,
-                                     sort_edges_by_receiver)
+from repro.data.radius_graph import (drop_longest_edges, pad_edges, pad_nodes,
+                                     radius_graph, sort_edges_by_receiver)
 
 _NODE_KEYS = ("x", "v", "h", "x_target", "node_mask")
 _EDGE_KEYS = ("senders", "receivers", "edge_mask")
@@ -101,60 +106,92 @@ def repad_arrays(a: dict, node_cap: int, edge_cap: int) -> dict:
     return out
 
 
-def attach_layout(a: dict, block_e: int | None = None) -> dict:
+def attach_layout(a: dict, block_e: int | None = None, cache=None) -> dict:
     """Build the host banded-CSR layout over one sample's *padded* edge
     arrays (the same arrays the trace-time regroup would see, so the fused
     kernel consumes it verbatim — DESIGN.md §6.6) and store the
     ``BandedCSR`` under ``"layout"``.  Samples sharing (node, edge)
     capacities get one band capacity by construction, so stacked batches
     are rectangular.
+
+    ``cache`` (a :class:`~repro.data.layout_cache.LayoutCache`) loads a
+    previously persisted layout instead of rebuilding — the build goes
+    through ``layout_cache.get_or_build`` either way, so the build/hit
+    telemetry counts it.
     """
     from repro.core.message_passing import EDGE_KERNEL_BLOCK_E
+    from repro.data.layout_cache import get_or_build
 
     a = dict(a)
-    a["layout"] = banded_csr_layout(
-        a["senders"], a["receivers"], a["x"].shape[0],
+    a["layout"] = get_or_build(
+        cache, a["senders"], a["receivers"], a["x"].shape[0],
         edge_mask=a["edge_mask"],
         block_e=block_e or EDGE_KERNEL_BLOCK_E)
     return a
 
 
-def _stack_layouts(lays):
-    """Per-sample ``BandedCSR`` layouts → one batched ``EdgeLayout``."""
-    from repro.kernels.edge_message import EdgeLayout, LayoutMeta
+class HostBatch(NamedTuple):
+    """Numpy (pre-device) twin of :class:`GraphBatch` — what the stream's
+    worker threads produce; :func:`batch_to_device` converts on the
+    consumer side so device transfer can double-buffer (DESIGN.md §8)."""
+
+    arrays: dict  # str → np.ndarray, leading batch dim
+    layout: Optional[tuple]  # stacked numpy layout children + LayoutMeta
+    sample_mask: Optional[np.ndarray]  # (B,) float32 | None
+
+
+def _stack_layouts_host(lays) -> tuple:
+    """Per-sample ``BandedCSR`` layouts → stacked numpy children + meta."""
+    from repro.kernels.edge_message import LayoutMeta
 
     l0 = lays[0]
     meta = LayoutMeta(l0.window, l0.swindow, l0.n_pad, l0.block_e)
     for l in lays[1:]:  # shared caps ⇒ shared band geometry, by construction
         assert LayoutMeta(l.window, l.swindow, l.n_pad, l.block_e) == meta, \
             "all samples of a batch must share one band geometry"
-    return EdgeLayout(
-        senders=jnp.asarray(np.stack([l.senders for l in lays])),
-        receivers=jnp.asarray(np.stack([l.receivers for l in lays])),
-        edge_mask=jnp.asarray(np.stack([l.edge_mask for l in lays])),
-        block_rwin=jnp.asarray(np.stack([l.block_rwin for l in lays])),
-        block_swin=jnp.asarray(np.stack([l.block_swin for l in lays])),
-        meta=meta)
+    return (np.stack([l.senders for l in lays]),
+            np.stack([l.receivers for l in lays]),
+            np.stack([l.edge_mask for l in lays]),
+            np.stack([l.block_rwin for l in lays]),
+            np.stack([l.block_swin for l in lays]),
+            meta)
 
 
-def make_batch(samples: Sequence[dict], pad_to: int | None = None) -> GraphBatch:
-    """Stack per-sample array dicts into one GraphBatch.
+def collate_host(samples: Sequence[dict],
+                 pad_to: int | None = None) -> HostBatch:
+    """Stack per-sample array dicts into one numpy :class:`HostBatch`.
 
-    Samples carrying a ``"layout"`` entry (see :func:`attach_layout`) yield
-    a layout-carrying batch.  ``pad_to`` pads a short batch to that many
-    slots by replicating the last sample with ``sample_mask`` 0 — losses
-    and metrics must weight by the mask (``trainer`` does).
+    Pure numpy — safe in worker threads.  ``pad_to`` pads a short batch to
+    that many slots by replicating the last sample at ``sample_mask`` 0.
     """
     samples = [dict(s) for s in samples]
     mask = None
     if pad_to is not None and len(samples) < pad_to:
         n_real = len(samples)
         samples += [dict(samples[-1]) for _ in range(pad_to - n_real)]
-        mask = jnp.asarray(
-            (np.arange(pad_to) < n_real).astype(np.float32))
+        mask = (np.arange(pad_to) < n_real).astype(np.float32)
     lays = [s.pop("layout", None) for s in samples]
-    layout = _stack_layouts(lays) if all(l is not None for l in lays) else None
+    layout = (_stack_layouts_host(lays)
+              if all(l is not None for l in lays) else None)
     stk = {k: np.stack([s[k] for s in samples]) for k in samples[0]}
+    return HostBatch(arrays=stk, layout=layout, sample_mask=mask)
+
+
+def batch_to_device(hb: HostBatch) -> GraphBatch:
+    """Host numpy batch → device :class:`GraphBatch` (async transfer —
+    ``jnp.asarray`` dispatches immediately, so issuing the next batch's
+    conversion before the current step finishes overlaps H2D with
+    compute)."""
+    from repro.kernels.edge_message import EdgeLayout
+
+    stk = hb.arrays
+    layout = None
+    if hb.layout is not None:
+        s, r, em, brw, bsw, meta = hb.layout
+        layout = EdgeLayout(
+            senders=jnp.asarray(s), receivers=jnp.asarray(r),
+            edge_mask=jnp.asarray(em), block_rwin=jnp.asarray(brw),
+            block_swin=jnp.asarray(bsw), meta=meta)
     b, e = stk["senders"].shape
     g = GeometricGraph(
         x=jnp.asarray(stk["x"]),
@@ -166,8 +203,20 @@ def make_batch(samples: Sequence[dict], pad_to: int | None = None) -> GraphBatch
         node_mask=jnp.asarray(stk["node_mask"]),
         edge_mask=jnp.asarray(stk["edge_mask"]),
     )
+    mask = None if hb.sample_mask is None else jnp.asarray(hb.sample_mask)
     return GraphBatch(graph=g, x_target=jnp.asarray(stk["x_target"]),
                       layout=layout, sample_mask=mask)
+
+
+def make_batch(samples: Sequence[dict], pad_to: int | None = None) -> GraphBatch:
+    """Stack per-sample array dicts into one GraphBatch.
+
+    Samples carrying a ``"layout"`` entry (see :func:`attach_layout`) yield
+    a layout-carrying batch.  ``pad_to`` pads a short batch to that many
+    slots by replicating the last sample with ``sample_mask`` 0 — losses
+    and metrics must weight by the mask (``trainer`` does).
+    """
+    return batch_to_device(collate_host(samples, pad_to))
 
 
 def dataset_to_batches(
@@ -180,43 +229,23 @@ def dataset_to_batches(
     shuffle_seed: int | None = None,
     with_layout: bool = True,
     drop_last: bool = False,
+    cache_dir: str | None = None,
 ) -> list[GraphBatch]:
     """Convert raw samples (NamedTuples with x0/v0/x1 + feature field) into
     fixed-shape batches.
 
-    Per-dataset capacities = max over samples; samples built below the
-    common capacity are *re-padded in place* (:func:`repad_arrays`), not
-    rebuilt from scratch.  With ``with_layout`` every sample also gets the
-    host banded-CSR layout at the shared capacities, so the batches feed
-    the fused edge kernel with zero trace-time regroups.  The trailing
-    ``len % batch_size`` samples become a final mask-padded partial batch
-    (:func:`make_batch` ``pad_to``) instead of being silently dropped;
-    ``drop_last`` restores the old behaviour (warning with the count).
+    Thin materialize-the-stream shim (DESIGN.md §8): the batch-building
+    logic — per-dataset shared capacities, :func:`repad_arrays` in place of
+    a second build pass, host banded layouts (``with_layout``), the final
+    mask-padded partial batch (``drop_last`` restores dropping + warning) —
+    lives in :class:`repro.data.stream.BatchStream`; this builds one epoch
+    synchronously in the calling thread and returns the eager list, for
+    tests and callers that want random access.  ``cache_dir`` enables the
+    on-disk layout cache.
     """
-    arrays = []
-    for s in samples:
-        arrays.append(sample_to_arrays(s.x0, s.v0, sample_h(s), s.x1, r=r,
-                                       drop_rate=drop_rate, edge_cap=edge_cap))
-    if not arrays:
-        return []
-    n_cap = max(a["x"].shape[0] for a in arrays)
-    e_cap = edge_cap or max(a["senders"].shape[0] for a in arrays)
-    arrays = [a if a["x"].shape[0] == n_cap and a["senders"].shape[0] == e_cap
-              else repad_arrays(a, n_cap, e_cap) for a in arrays]
-    if with_layout:
-        arrays = [attach_layout(a) for a in arrays]
-    if shuffle_seed is not None:
-        rng = np.random.default_rng(shuffle_seed)
-        rng.shuffle(arrays)
-    batches = []
-    for i in range(0, len(arrays) - batch_size + 1, batch_size):
-        batches.append(make_batch(arrays[i : i + batch_size]))
-    rem = len(arrays) % batch_size
-    if rem:
-        if drop_last:
-            warnings.warn(
-                f"dataset_to_batches: dropping the trailing {rem} samples "
-                f"(drop_last=True, batch_size={batch_size})", stacklevel=2)
-        else:
-            batches.append(make_batch(arrays[-rem:], pad_to=batch_size))
-    return batches
+    from repro.data.stream import BatchStream
+
+    return BatchStream(
+        samples, batch_size, r=r, drop_rate=drop_rate, edge_cap=edge_cap,
+        shuffle_seed=shuffle_seed, with_layout=with_layout,
+        drop_last=drop_last, cache_dir=cache_dir).materialize()

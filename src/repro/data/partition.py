@@ -11,9 +11,8 @@ from typing import NamedTuple
 import numpy as np
 
 from repro.core.message_passing import EDGE_KERNEL_BLOCK_E
-from repro.data.radius_graph import (banded_csr_layout, drop_longest_edges,
-                                     pad_edges, pad_nodes, radius_graph,
-                                     sort_edges_by_receiver)
+from repro.data.radius_graph import (drop_longest_edges, pad_edges, pad_nodes,
+                                     radius_graph, sort_edges_by_receiver)
 
 
 def random_partition(rng: np.random.Generator, n: int, d: int) -> np.ndarray:
@@ -122,22 +121,28 @@ LAYOUT_FIELDS = ("lay_senders", "lay_receivers", "lay_edge_mask",
 
 
 def shard_layout_fields(senders: np.ndarray, receivers: np.ndarray,
-                        edge_mask: np.ndarray, n_cap: int) -> dict:
+                        edge_mask: np.ndarray, n_cap: int,
+                        layout_cache=None) -> dict:
     """(D, e_cap) padded local edge arrays → stacked ``lay_*`` field dict.
 
     The single home of the ``BandedCSR`` → ``PartitionedGraph`` field
     packing — :func:`partition_sample` and batch re-padding
     (:func:`repad_partition`) both go through it, so the field set changes
     in one place.  Shards share (n_cap, e_cap), hence one band capacity.
+    ``layout_cache`` (``data.layout_cache.LayoutCache``) loads persisted
+    per-shard layouts on warm runs; builds always route through
+    ``get_or_build`` so the build telemetry counts them.
     """
+    from repro.data.layout_cache import get_or_build
+
     out = {f: [] for f in LAYOUT_FIELDS}
     for d in range(senders.shape[0]):
         # block_e pinned to the kernel constant: the dist path stamps its
         # LayoutMeta with EDGE_KERNEL_BLOCK_E, so building here at an
         # independent default would trip the meta check if either drifted
-        lay = banded_csr_layout(senders[d], receivers[d], n_cap,
-                                edge_mask=edge_mask[d],
-                                block_e=EDGE_KERNEL_BLOCK_E)
+        lay = get_or_build(layout_cache, senders[d], receivers[d], n_cap,
+                           edge_mask=edge_mask[d],
+                           block_e=EDGE_KERNEL_BLOCK_E)
         out["lay_senders"].append(lay.senders)
         out["lay_receivers"].append(lay.receivers)
         out["lay_edge_mask"].append(lay.edge_mask)
@@ -147,13 +152,14 @@ def shard_layout_fields(senders: np.ndarray, receivers: np.ndarray,
     return {f: np.stack(v) for f, v in out.items()}
 
 
-def repad_partition(pg: PartitionedGraph, n_cap: int,
-                    e_cap: int) -> PartitionedGraph:
+def repad_partition(pg: PartitionedGraph, n_cap: int, e_cap: int,
+                    layout_cache=None) -> PartitionedGraph:
     """Re-pad one PartitionedGraph to larger capacities.
 
     Node/edge arrays grow by zero-padding (masked slots); the banded
-    layouts are *rebuilt* — band geometry is a function of the padded
-    capacities, so the original layout is invalid at the new shapes.
+    layouts are *rebuilt* (through ``layout_cache`` when given) — band
+    geometry is a function of the padded capacities, so the original
+    layout is invalid at the new shapes.
     """
     def pad_to(a, cap):
         width = [(0, 0), (0, cap - a.shape[1])] + [(0, 0)] * (a.ndim - 2)
@@ -164,7 +170,8 @@ def repad_partition(pg: PartitionedGraph, n_cap: int,
     edge = {f: pad_to(getattr(pg, f), e_cap)
             for f in ("senders", "receivers", "edge_mask")}
     lay = shard_layout_fields(edge["senders"], edge["receivers"],
-                              edge["edge_mask"], n_cap)
+                              edge["edge_mask"], n_cap,
+                              layout_cache=layout_cache)
     return pg._replace(**node, **edge, **lay)
 
 
@@ -212,6 +219,7 @@ def partition_sample(
     n_cap: int | None = None,
     e_cap: int | None = None,
     seed: int = 0,
+    layout_cache=None,
 ) -> PartitionedGraph:
     """Partition one large graph into d padded shards with local radius graphs.
 
@@ -262,5 +270,6 @@ def partition_sample(
     # same arrays the trace-time regroup would see, so the fused kernel
     # can consume them verbatim
     lay = shard_layout_fields(base["senders"], base["receivers"],
-                              base["edge_mask"], n_cap)
+                              base["edge_mask"], n_cap,
+                              layout_cache=layout_cache)
     return PartitionedGraph(**base, **lay)

@@ -97,17 +97,23 @@ class ShardedBatch(NamedTuple):
 _REPAD_WARNED = False
 
 
-def stack_partitions(pgs) -> ShardedBatch:
-    """list[PartitionedGraph] (one per batch element, each (D, ...)) → ShardedBatch.
+def stack_partitions_host(pgs, layout_cache=None) -> dict:
+    """list[PartitionedGraph] → dict of stacked *numpy* ShardedBatch fields.
+
+    The host (worker-thread-safe) half of :func:`stack_partitions` — the
+    streaming data plane collates here and converts on the consumer side
+    (``sharded_batch_to_device``) so device transfer can double-buffer
+    (DESIGN.md §8).
 
     Per-sample node/edge capacities may differ — re-pad to the batch max so
     the stacked arrays are rectangular (host-precomputed banded layouts are
-    rebuilt at the new capacities — ``data.partition.repad_partition``).
-    Inflating a sample's capacity by more than 2× warns (once): that much
-    padding usually means one outlier sample is dictating the whole batch's
-    shapes — and compute.  ``lay_window_offsets`` is a host-side diagnostic
-    and deliberately *not* a ShardedBatch field — the kernel never reads
-    it, so it would be dead payload on the graph axis.
+    rebuilt at the new capacities — ``data.partition.repad_partition``,
+    through ``layout_cache`` when given).  Inflating a sample's capacity by
+    more than 2× warns (once): that much padding usually means one outlier
+    sample is dictating the whole batch's shapes — and compute.
+    ``lay_window_offsets`` is a host-side diagnostic and deliberately *not*
+    a ShardedBatch field — the kernel never reads it, so it would be dead
+    payload on the graph axis.
     """
     global _REPAD_WARNED
     n_cap = max(p.x.shape[1] for p in pgs)
@@ -126,11 +132,23 @@ def stack_partitions(pgs) -> ShardedBatch:
                 f"e_cap={e0}) to the batch max (n_cap={n_cap}, e_cap={e_cap}) "
                 f"— >2× inflation; one outlier sample is dictating the "
                 f"batch's padded shapes (warned once)", stacklevel=2)
-        stacked.append(repad_partition(p, n_cap, e_cap))
+        stacked.append(repad_partition(p, n_cap, e_cap,
+                                       layout_cache=layout_cache))
 
-    return ShardedBatch(**{
-        f: jnp.asarray(np.stack([getattr(p, f) for p in stacked], axis=1))
-        for f in ShardedBatch._fields})
+    return {f: np.stack([getattr(p, f) for p in stacked], axis=1)
+            for f in ShardedBatch._fields}
+
+
+def sharded_batch_to_device(host: dict) -> ShardedBatch:
+    """Stacked numpy field dict → device ShardedBatch (async transfer)."""
+    return ShardedBatch(**{f: jnp.asarray(a) for f, a in host.items()})
+
+
+def stack_partitions(pgs) -> ShardedBatch:
+    """list[PartitionedGraph] (one per batch element, each (D, ...)) →
+    ShardedBatch.  See :func:`stack_partitions_host` for the capacity
+    re-padding semantics."""
+    return sharded_batch_to_device(stack_partitions_host(pgs))
 
 
 def _local_graph(sb: ShardedBatch) -> GeometricGraph:
@@ -210,7 +228,9 @@ def build_dist_train_step(cfg: FastEGNNConfig, mesh: Mesh, opt: Adam,
             x, h, vs = fast_egnn_apply(params, cfg, g, axis_name=GRAPH_AXIS,
                                        edge_layout=lay)
             mse = masked_mse(x, sbe.x_target, g.node_mask, axis_name=GRAPH_AXIS)
-            mmd = mmd_loss(vs.z, sbe.x_target, g.node_mask, sigma=mmd_sigma)
+            # kernel-backed configs run the kernel-backed MMD cross term too
+            mmd = mmd_loss(vs.z, sbe.x_target, g.node_mask, sigma=mmd_sigma,
+                           use_kernel=cfg.use_kernel)
             return mse, mmd
 
         mse, mmd = jax.vmap(one)(sb)

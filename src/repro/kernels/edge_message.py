@@ -301,7 +301,7 @@ def edge_pathway_fused(
     *, gate_mode: str = "mlp", rel_mode: str = "raw",
     clamp: float = math.inf, block_e: int = 128,
     window: int | None = None, swindow: int | None = None,
-    interpret: bool = True, layout: EdgeLayout | None = None,
+    interpret: bool | None = None, layout: EdgeLayout | None = None,
 ):
     """See ``repro.kernels.ref.edge_pathway_ref`` for the exact contract.
 
@@ -319,7 +319,13 @@ def edge_pathway_fused(
     and ``block_e``): the trace-time regrouping is skipped entirely and
     ``snd``/``rcv``/``em`` are ignored by the forward (they remain the
     backward oracle's edge list in ``ops.edge_pathway``).
+
+    ``interpret=None`` (default) auto-detects: compile on TPU, interpret
+    elsewhere (``kernels.runtime.default_interpret``).
     """
+    from repro.kernels.runtime import resolve_interpret
+
+    interpret = resolve_interpret(interpret)
     n = x.shape[0]
     m = w2.shape[1]
     e = snd.shape[0]

@@ -37,8 +37,14 @@ def _kernel(x_ref, mask_ref, z_ref, out_ref, *, inv_two_sigma2: float):
 
 @functools.partial(jax.jit, static_argnames=("sigma", "block_n", "interpret"))
 def mmd_cross_sum(x: Array, z: Array, node_mask: Array, *, sigma: float,
-                  block_n: int = 1024, interpret: bool = True) -> Array:
-    """Σ_i mask_i Σ_c exp(−‖x_i−z_c‖²/(2σ²)) — matches ref.mmd_cross_ref."""
+                  block_n: int = 1024, interpret: bool | None = None) -> Array:
+    """Σ_i mask_i Σ_c exp(−‖x_i−z_c‖²/(2σ²)) — matches ref.mmd_cross_ref.
+
+    ``interpret=None`` auto-detects (compile on TPU, interpret elsewhere).
+    """
+    from repro.kernels.runtime import resolve_interpret
+
+    interpret = resolve_interpret(interpret)
     n = x.shape[0]
     c = z.shape[0]
     n_pad = -(-n // block_n) * block_n

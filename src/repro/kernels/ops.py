@@ -18,13 +18,10 @@ from jax.dtypes import float0
 from repro.kernels import ref
 from repro.kernels.edge_message import edge_pathway_fused
 from repro.kernels.mmd_rbf import mmd_cross_sum
+from repro.kernels.runtime import default_interpret as _interpret
 from repro.kernels.virtual_message import virtual_pathway_fused
 
 Array = jax.Array
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 # ------------------------------------------------------------------- edge MP
@@ -211,23 +208,38 @@ def virtual_pathway(vb, h: Array, x: Array, vs, mv: Array, node_mask: Array):
 
 
 # --------------------------------------------------------------------- MMD
-@jax.custom_vjp
-def _mmd_cross(x, z, mask, sigma):
-    return mmd_cross_sum(x, z, mask, sigma=float(sigma), interpret=_interpret())
+@functools.lru_cache(maxsize=None)
+def _mmd_cross_custom(sigma: float):
+    """Per-sigma custom_vjp wrapper (sigma must stay *static* — a traced
+    operand would break ``float(sigma)`` inside the jitted kernel under
+    vmap/grad; cached like ``_edge_custom`` so jit caches stay warm)."""
+
+    @jax.custom_vjp
+    def f(x, z, mask):
+        return mmd_cross_sum(x, z, mask, sigma=sigma, interpret=_interpret())
+
+    def fwd(x, z, mask):
+        return f(x, z, mask), (x, z, mask)
+
+    def bwd(res, cot):
+        x, z, mask = res
+        _, vjp = jax.vjp(
+            lambda xx, zz, mm: ref.mmd_cross_ref(xx, zz, mm, sigma),
+            x, z, mask)
+        return vjp(cot)
+
+    f.defvjp(fwd, bwd)
+    return f
 
 
-def _mmd_cross_fwd(x, z, mask, sigma):
-    return _mmd_cross(x, z, mask, sigma), (x, z, mask, sigma)
+def mmd_cross(x: Array, z: Array, weight: Array, sigma: float) -> Array:
+    """Differentiable Σ_i w_i Σ_c k(x_i, z_c) via the Pallas kernel.
 
-
-def _mmd_cross_bwd(res, cot):
-    x, z, mask, sigma = res
-    _, vjp = jax.vjp(lambda xx, zz, mm: ref.mmd_cross_ref(xx, zz, mm, sigma), x, z, mask)
-    gx, gz, gm = vjp(cot)
-    return gx, gz, gm, None
-
-
-_mmd_cross.defvjp(_mmd_cross_fwd, _mmd_cross_bwd)
+    The trainable entry point ``core.mmd.mmd_loss(use_kernel=True)`` routes
+    its cross term through (``weight`` is the node mask, or all-ones for a
+    sampled subset); backward remats through ``ref.mmd_cross_ref``.
+    """
+    return _mmd_cross_custom(float(sigma))(x, z, weight)
 
 
 def mmd_loss_kernel(z: Array, x: Array, node_mask: Array, *, sigma: float = 1.5) -> Array:
@@ -235,6 +247,6 @@ def mmd_loss_kernel(z: Array, x: Array, node_mask: Array, *, sigma: float = 1.5)
     c = z.shape[0]
     zc = z[:, None, :] - z[None, :, :]
     term_vv = jnp.sum(jnp.exp(-jnp.sum(zc**2, -1) / (2 * sigma * sigma))) / (c * c)
-    cross = _mmd_cross(x, z, node_mask, sigma)
+    cross = mmd_cross(x, z, node_mask, sigma)
     denom = jnp.maximum(jnp.sum(node_mask), 1.0) * c
     return term_vv - cross / denom

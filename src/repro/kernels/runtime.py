@@ -1,0 +1,41 @@
+"""Backend detection shared by every Pallas kernel and its callers.
+
+Before this module each call site hand-rolled the same check:
+``kernels.ops`` had a private ``_interpret()``, ``repro.pipeline`` and the
+benches re-spelled ``"tpu" if jax.default_backend() == "tpu" else
+"interpret"``, and the raw kernels defaulted ``interpret=True`` — which
+silently ran the *emulated* kernels on a real TPU for anyone calling them
+directly.  This is now the single home of that decision:
+
+* :func:`default_interpret` — should Pallas kernels run in interpret mode
+  on this backend?  (Everything that is not a TPU interprets.)
+* :func:`resolve_interpret` — resolve a kernel's ``interpret`` argument:
+  ``None`` (the kernels' new default) auto-detects, an explicit bool is
+  honoured (tests force ``interpret=True`` to exercise emulation on any
+  backend).
+* :func:`backend_mode` — the ``'tpu'`` / ``'interpret'`` tag the dispatch
+  telemetry and bench rows record (``message_passing.dispatch_mode``).
+
+The checks are deliberately *call-time* (not import-time constants): jax
+may be reconfigured between imports, and trace-time resolution keeps jit
+caches keyed on the actual decision via the static ``interpret`` argument.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """True unless running on a real TPU backend (Pallas compiles there)."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve a kernel's ``interpret`` argument: ``None`` → auto-detect."""
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+def backend_mode() -> str:
+    """The dispatch-telemetry tag for this backend: ``'tpu'`` or
+    ``'interpret'`` (what a dispatched fused kernel actually ran as)."""
+    return "interpret" if default_interpret() else "tpu"

@@ -70,10 +70,14 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 def swa_attention(
     q: Array, k: Array, v: Array,
     *, causal: bool = True, window: int | None = None,
-    block_q: int = 128, block_k: int = 128, interpret: bool = True,
+    block_q: int = 128, block_k: int = 128, interpret: bool | None = None,
 ) -> Array:
     """q/k/v: (H, S, D) → (H, S, D).  Matches ref.swa_attention_ref
-    (which uses (S, H, D) layout — transpose at the call site)."""
+    (which uses (S, H, D) layout — transpose at the call site).
+    ``interpret=None`` auto-detects (compile on TPU, interpret elsewhere)."""
+    from repro.kernels.runtime import resolve_interpret
+
+    interpret = resolve_interpret(interpret)
     nh, s, d = q.shape
     assert k.shape == v.shape == (nh, s, d)
     bq, bk = min(block_q, s), min(block_k, s)

@@ -75,9 +75,15 @@ def virtual_pathway_fused(
     w1h: Array, w1d: Array, const1: Array, w2: Array, b2: Array,
     wg1: Array, bg1: Array, wg2: Array,
     wz1: Array, bz1: Array, wz2: Array,
-    *, block_n: int = 512, interpret: bool = True,
+    *, block_n: int = 512, interpret: bool | None = None,
 ):
-    """See `repro.kernels.ref.virtual_pathway_ref` for the exact contract."""
+    """See `repro.kernels.ref.virtual_pathway_ref` for the exact contract.
+
+    ``interpret=None`` auto-detects (compile on TPU, interpret elsewhere).
+    """
+    from repro.kernels.runtime import resolve_interpret
+
+    interpret = resolve_interpret(interpret)
     n, dh = h.shape
     c, _, hid = w1h.shape
     # pad N to a multiple of block_n (mask zeroes the padded rows' sums)

@@ -72,10 +72,24 @@ def gnn_main(args):
                      mmd_sigma=args.mmd_sigma, seed=args.seed)
     pipe = build_pipeline(model, jax.random.PRNGKey(args.seed), mesh=mesh,
                           train_cfg=tc, **kw)
-    bk = dict(r=r, drop_rate=args.drop_rate, partition=args.partition)
-    tr = pipe.make_batches(data[:n_tr], args.batch, **bk)
+    # streaming data plane (DESIGN.md §8): batches build in background
+    # workers behind a bounded queue; --layout-cache makes warm runs skip
+    # every banded-layout rebuild; --reshuffle varies the epoch order
+    bk = dict(r=r, drop_rate=args.drop_rate, partition=args.partition,
+              prefetch=args.prefetch, num_workers=args.workers,
+              cache_dir=args.layout_cache)
+    # reshuffle applies to training only: a reshuffled val stream would
+    # re-partition (mesh) / re-batch validation every epoch, adding
+    # partitioning noise to the early-stopping metric
+    tr = pipe.make_batches(data[:n_tr], args.batch,
+                           reshuffle_each_epoch=args.reshuffle,
+                           shuffle_seed=args.seed if args.reshuffle else None,
+                           **bk)
     va = pipe.make_batches(data[n_tr:], args.batch, **bk)
     res = pipe.fit(tr, va, verbose=True)
+    if args.layout_cache:
+        from repro.data.layout_cache import cache_stats
+        print("layout cache:", cache_stats())
     print(f"best val MSE: {res.best_val:.6f}  wall: {res.wall_time:.1f}s"
           f"  devices: {args.devices}")
     if args.checkpoint:
@@ -141,6 +155,16 @@ def main():
     g.add_argument("--partition", default="random", choices=["random", "metis"])
     g.add_argument("--checkpoint", default=None)
     g.add_argument("--seed", type=int, default=0)
+    g.add_argument("--layout-cache", default=None, metavar="DIR",
+                   help="persist banded-CSR layouts here (warm runs skip "
+                        "every layout rebuild — DESIGN.md §8)")
+    g.add_argument("--reshuffle", action="store_true",
+                   help="reshuffle the training sample order every epoch "
+                        "(epoch-keyed rng; off = reproduce the eager order)")
+    g.add_argument("--prefetch", type=int, default=2,
+                   help="host batches buffered ahead of the training step")
+    g.add_argument("--workers", type=int, default=4,
+                   help="background batch-build threads")
     li = sub.add_parser("lm")
     li.add_argument("--arch", required=True)
     li.add_argument("--steps", type=int, default=100)

@@ -8,12 +8,18 @@ while DistEGNN went ``FastEGNNConfig`` → ``partition_sample`` /
 regroups).  :func:`build_pipeline` collapses both onto one factory:
 
     pipe = build_pipeline("fast_egnn", key, train_cfg=tc, hidden=64, ...)
-    tr = pipe.make_batches(data[:n], batch_size, r=r)
+    tr = pipe.make_batches(data[:n], batch_size, r=r)   # GraphBatch stream
     res = pipe.fit(tr, va)                       # single-device vmap path
 
     pipe = build_pipeline("fast_egnn", key, mesh=make_gnn_mesh(4), ...)
-    tr = pipe.make_batches(data[:n], batch_size, r=r)   # ShardedBatch list
+    tr = pipe.make_batches(data[:n], batch_size, r=r)   # ShardedBatch stream
     res = pipe.fit(tr, va)                       # shard_map DistEGNN path
+
+``make_batches`` returns a re-iterable :class:`~repro.data.stream.BatchStream`
+(DESIGN.md §8): ``fit`` consumes one epoch per pass while worker threads
+build the next batches behind a bounded queue and the device transfer
+double-buffers; ``stream[i]`` / ``len(stream)`` materialize the eager list
+for random-access callers.
 
 Either way the batches carry host-precomputed banded-CSR layouts, so with
 ``use_kernel=True`` the fused Pallas edge kernel dispatches with **zero
@@ -22,12 +28,9 @@ the trace-time telemetry proving it.
 """
 from __future__ import annotations
 
-import time
-import warnings
 from typing import Any, Callable, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import message_passing as mp
@@ -76,16 +79,29 @@ class Pipeline:
     def make_batches(self, samples, batch_size: int, *, r: float = np.inf,
                      drop_rate: float = 0.0, partition: str = "random",
                      shuffle_seed: Optional[int] = None,
-                     with_layout: Optional[bool] = None) -> list:
-        """Raw samples → fixed-shape, layout-carrying batches.
+                     with_layout: Optional[bool] = None,
+                     reshuffle_each_epoch: bool = False,
+                     cache_dir: Optional[str] = None,
+                     prefetch: Optional[int] = None,
+                     num_workers: Optional[int] = None) -> "BatchStream":
+        """Raw samples → a :class:`~repro.data.stream.BatchStream` of
+        fixed-shape, layout-carrying batches (DESIGN.md §8).
 
-        Single-device: ``data.loader.dataset_to_batches`` (GraphBatch with
-        the stacked host banded layout; the trailing partial batch is
-        mask-padded, never dropped).  Distributed: per-sample
-        ``partition_sample`` (strategy = ``partition``) stacked into
-        ``ShardedBatch``es; trailing samples short of a full batch are
-        dropped with a warning (the shard_map program is fixed-shape and
-        carries no sample mask).
+        Single-device streams yield ``GraphBatch``es (stacked host banded
+        layout; the trailing partial batch is mask-padded, never dropped).
+        Distributed streams yield ``ShardedBatch``es built via per-sample
+        ``partition_sample`` (strategy = ``partition``); trailing samples
+        short of a full batch are dropped with a warning (the shard_map
+        program is fixed-shape and carries no sample mask).
+
+        The stream is re-iterable (``fit`` runs one epoch per pass,
+        building batches in background workers behind a bounded queue and
+        double-buffering the device transfer) and still supports
+        ``len`` / indexing by materializing the eager list on demand.
+        ``reshuffle_each_epoch`` keys a fresh sample order per epoch from
+        ``(shuffle_seed, epoch)`` — off by default so epochs replay the
+        eager order exactly.  ``cache_dir`` persists banded layouts to
+        disk, so warm runs skip every layout rebuild.
 
         ``with_layout`` defaults to this pipeline's ``cfg.use_kernel``:
         only the fused kernel reads the host layout, so layout-free
@@ -93,35 +109,19 @@ class Pipeline:
         mesh path layouts are structural ``ShardedBatch`` fields and
         always built.
         """
-        from repro.data.loader import dataset_to_batches, sample_h
+        from repro.data.stream import (DEFAULT_PREFETCH, DEFAULT_WORKERS,
+                                       BatchStream)
 
         if with_layout is None:
             with_layout = bool(getattr(self.cfg, "use_kernel", False))
-        if self.mesh is None:
-            return dataset_to_batches(
-                samples, batch_size, r=r, drop_rate=drop_rate,
-                shuffle_seed=shuffle_seed, with_layout=with_layout)
-        from repro.data.partition import partition_sample
-        from repro.distributed.dist_egnn import stack_partitions
-
-        samples = list(samples)
-        if shuffle_seed is not None:
-            np.random.default_rng(shuffle_seed).shuffle(samples)
-        d = self.mesh.devices.size
-        batches = []
-        for i in range(0, len(samples) - batch_size + 1, batch_size):
-            pgs = [partition_sample(s.x0, s.v0, sample_h(s), s.x1, d=d, r=r,
-                                    strategy=partition, drop_rate=drop_rate,
-                                    seed=j)
-                   for j, s in enumerate(samples[i : i + batch_size])]
-            batches.append(stack_partitions(pgs))
-        rem = len(samples) % batch_size
-        if rem:
-            warnings.warn(
-                f"make_batches(mesh): dropping the trailing {rem} samples "
-                f"(< batch_size={batch_size}; the sharded program has no "
-                f"sample mask)", stacklevel=2)
-        return batches
+        return BatchStream(
+            samples, batch_size, r=r, drop_rate=drop_rate,
+            shuffle_seed=shuffle_seed, with_layout=with_layout,
+            reshuffle_each_epoch=reshuffle_each_epoch, cache_dir=cache_dir,
+            prefetch=DEFAULT_PREFETCH if prefetch is None else prefetch,
+            num_workers=DEFAULT_WORKERS if num_workers is None else num_workers,
+            n_shards=None if self.mesh is None else self.mesh.devices.size,
+            partition=partition)
 
     # --------------------------------------------------------------- steps
     def _build_steps(self):
@@ -195,49 +195,22 @@ class Pipeline:
     def fit(self, train_batches, val_batches, verbose: bool = False) -> FitResult:
         """Epochs + validation-based early stopping on either path.
 
-        Single-device delegates to ``trainer.fit`` (bit-identical to the
-        pre-pipeline protocol); distributed runs the same epoch/early-stop
-        loop over ``build_dist_train_step``.  Updates ``self.params`` to
+        One stream-consuming loop (``trainer.run_fit`` — DESIGN.md §8) for
+        both the single-device and distributed paths: each epoch
+        re-iterates ``train_batches`` / ``val_batches``, so eager lists
+        and ``BatchStream``s (whose background prefetch overlaps the host
+        batch build and H2D with step compute) both work, with per-step
+        parity between them on a fixed seed.  Updates ``self.params`` to
         the best validation params and returns the :class:`FitResult`.
         """
-        tc = self.train_cfg
-        if self.mesh is None:
-            from repro.training.trainer import fit as _fit
+        from repro.training.trainer import run_fit
 
-            res = _fit(self.apply_full, self.cfg, self.params, train_batches,
-                       val_batches, tc, verbose=verbose)
-            self.params = res.params
-            return res
         step, eval_step = self._build_steps()
-        params, opt_state = self.params, self.opt.init(self.params)
-        best_val, best_params, patience = float("inf"), params, 0
-        history = []
-        t0 = time.time()
-        for epoch in range(tc.epochs):
-            ep_loss = 0.0
-            for b in train_batches:
-                params, opt_state, m = step(params, opt_state, b)
-                ep_loss += float(m["loss"])
-            ep_loss /= max(len(train_batches), 1)
-            if val_batches:
-                val = float(jnp.mean(jnp.stack(
-                    [eval_step(params, b) for b in val_batches])))
-            else:  # no held-out shards: fall back to the train objective
-                val = ep_loss
-            history.append({"epoch": epoch, "train_loss": ep_loss,
-                            "val_mse": val})
-            if verbose:
-                print(f"epoch {epoch}: train {ep_loss:.5f} val {val:.5f}",
-                      flush=True)
-            if val < best_val:
-                best_val, best_params, patience = val, params, 0
-            else:
-                patience += 1
-                if patience >= tc.early_stop:
-                    break
-        self.params = best_params
-        return FitResult(params=best_params, best_val=best_val,
-                         history=history, wall_time=time.time() - t0)
+        res = run_fit(step, eval_step, self.params,
+                      self.opt.init(self.params), self.train_cfg,
+                      train_batches, val_batches, verbose=verbose)
+        self.params = res.params
+        return res
 
     # ----------------------------------------------------------- telemetry
     def dispatch_report(self) -> dict:
@@ -247,11 +220,12 @@ class Pipeline:
         Counts accumulate per *trace*: ``mp.reset_dispatch_counts()``
         before building a fresh program to observe its decisions.
         """
+        from repro.kernels.runtime import backend_mode
+
         counts = mp.dispatch_counts()
-        backend = "tpu" if jax.default_backend() == "tpu" else "interpret"
         use_kernel = bool(getattr(self.cfg, "use_kernel", False))
         return dict(counts=counts, use_kernel=use_kernel,
-                    mode=mp.dispatch_mode(counts, use_kernel, backend))
+                    mode=mp.dispatch_mode(counts, use_kernel, backend_mode()))
 
 
 def build_pipeline(name: str, key, *, mesh=None,

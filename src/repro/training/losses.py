@@ -38,14 +38,22 @@ def combined_objective(
     mmd_sample: Optional[int] = None,
     key: Optional[Array] = None,
     axis_name: Optional[str] = None,
+    use_kernel: bool = False,
 ) -> tuple[Array, dict]:
-    """Eq. 11: L = MSE(X^L, X^GT) + λ·MMD(Z^L, X^GT)."""
+    """Eq. 11: L = MSE(X^L, X^GT) + λ·MMD(Z^L, X^GT).
+
+    ``use_kernel`` routes the MMD cross term through the Pallas kernel
+    (``core.mmd.mmd_loss(use_kernel=...)``) — the trainer forwards the
+    model config's ``use_kernel`` flag, so the kernel-backed models run a
+    kernel-backed objective too.
+    """
     mse = masked_mse(x_pred, x_target, node_mask, axis_name)
     aux = {"mse": mse}
     loss = mse
     if z_virtual is not None and lam > 0.0:
         mmd = mmd_loss(z_virtual, x_target, node_mask, sigma=sigma,
-                       sample_size=mmd_sample, key=key)
+                       sample_size=mmd_sample, key=key,
+                       use_kernel=use_kernel)
         aux["mmd"] = mmd
         loss = loss + lam * mmd
     return loss, aux

@@ -61,6 +61,7 @@ def _apply(apply_full: Callable, params, cfg_model, g, lay):
 
 def build_train_step(apply_full: Callable, cfg_model, tc: TrainConfig, opt: Adam):
     """Returns jitted (params, opt_state, batch, key) → (params, opt_state, metrics)."""
+    use_kernel = bool(getattr(cfg_model, "use_kernel", False))
 
     def per_sample_loss(params, g, x_target, key, lay):
         x_pred, aux = _apply(apply_full, params, cfg_model, g, lay)
@@ -68,6 +69,7 @@ def build_train_step(apply_full: Callable, cfg_model, tc: TrainConfig, opt: Adam
         loss, parts = combined_objective(
             x_pred, x_target, g.node_mask, z,
             lam=tc.lam_mmd, sigma=tc.mmd_sigma, mmd_sample=tc.mmd_sample, key=key,
+            use_kernel=use_kernel,
         )
         return loss, parts
 
@@ -114,11 +116,83 @@ def batch_weight(batch) -> float:
     """Number of *real* samples in a batch — the weight of its per-batch
     mean in any across-batch aggregate.  Equal-weight averaging would let
     the mask-padded trailing partial batch over-weight its few real
-    samples by batch_size/rem."""
+    samples by batch_size/rem.  ``ShardedBatch``es (no sample mask, always
+    full — the mesh path drops trailing samples) weigh their batch dim."""
     sm = getattr(batch, "sample_mask", None)
-    if sm is None:
-        return float(batch.graph.x.shape[0])
-    return float(jnp.sum(sm))
+    if sm is not None:
+        return float(jnp.sum(sm))
+    g = getattr(batch, "graph", None)
+    if g is not None:
+        return float(g.x.shape[0])
+    return float(batch.x.shape[1])  # ShardedBatch: (D, B, ...)
+
+
+def run_fit(
+    train_step: Callable,
+    eval_step: Callable,
+    params,
+    opt_state,
+    tc: TrainConfig,
+    train_batches,
+    val_batches,
+    verbose: bool = False,
+) -> FitResult:
+    """THE epoch loop: epochs + validation-based early stopping (the
+    paper's protocol, Table IX) over any re-iterable batch source.
+
+    Both training surfaces — :func:`fit` (single-device) and
+    ``repro.pipeline.Pipeline.fit`` (single-device *and* distributed) —
+    consume this one loop, so there is exactly one home of the
+    epoch/early-stop/aggregation semantics (DESIGN.md §8).  The batch
+    contract is the iterator contract: ``train_batches`` / ``val_batches``
+    are re-iterated once per epoch — eager lists and
+    ``data.stream.BatchStream`` both qualify, and a stream's background
+    prefetch overlaps the host batch build with the jitted steps.
+    Per-batch means are weighted by :func:`batch_weight` so mask-padded
+    partial batches never distort the epoch aggregates.
+
+    ``train_step(params, opt_state, batch, key)`` → ``(params, opt_state,
+    metrics)`` with ``metrics["loss"]``; ``eval_step(params, batch)`` →
+    scalar.  Without validation batches the train objective drives early
+    stopping.
+    """
+    key = jax.random.PRNGKey(tc.seed)
+    best_val, best_params, patience = float("inf"), params, 0
+    history = []
+    t0 = time.time()
+    for epoch in range(tc.epochs):
+        key, sub = jax.random.split(key)
+        ep_loss, ep_w = 0.0, 0.0
+        for batch in train_batches:
+            sub, k = jax.random.split(sub)
+            params, opt_state, parts = train_step(params, opt_state, batch, k)
+            w = batch_weight(batch)
+            ep_loss += float(parts["loss"]) * w
+            ep_w += w
+        # sample-weighted across batches: per-batch means already exclude
+        # mask-padded slots, so weighting by real count makes the epoch
+        # aggregates exact per-sample means
+        vals = [(float(eval_step(params, b)), batch_weight(b))
+                for b in val_batches]
+        if vals:
+            val = float(np.average([v for v, _ in vals],
+                                   weights=[w for _, w in vals]))
+        else:  # no held-out data: fall back to the train objective
+            val = ep_loss / max(ep_w, 1.0)
+        history.append({"epoch": epoch,
+                        "train_loss": ep_loss / max(ep_w, 1.0),
+                        "val_mse": val})
+        if verbose:
+            print(f"epoch {epoch}: train {history[-1]['train_loss']:.5f} "
+                  f"val {val:.5f}", flush=True)
+        if val < best_val:
+            best_val, best_params, patience = val, params, 0
+        else:
+            patience += 1
+            if patience >= tc.early_stop:
+                break
+    return FitResult(params=best_params, best_val=best_val, history=history,
+                     wall_time=time.time() - t0)
 
 
 def fit(
@@ -131,36 +205,6 @@ def fit(
     verbose: bool = False,
 ) -> FitResult:
     opt = Adam(lr=tc.lr, weight_decay=tc.weight_decay, grad_clip=tc.grad_clip)
-    opt_state = opt.init(params)
     train_step, eval_step = build_train_step(apply_full, cfg_model, tc, opt)
-    key = jax.random.PRNGKey(tc.seed)
-    best_val, best_params, patience = float("inf"), params, 0
-    history = []
-    t0 = time.time()
-    tr_w = [batch_weight(b) for b in train_batches]
-    va_w = [batch_weight(b) for b in val_batches]
-    for epoch in range(tc.epochs):
-        key, sub = jax.random.split(key)
-        ep_loss = 0.0
-        for batch, w in zip(train_batches, tr_w):
-            sub, k = jax.random.split(sub)
-            params, opt_state, parts = train_step(params, opt_state, batch, k)
-            ep_loss += float(parts["loss"]) * w
-        # sample-weighted across batches: per-batch means already exclude
-        # mask-padded slots, so weighting by real count makes the epoch
-        # aggregates exact per-sample means
-        val = float(np.average([float(eval_step(params, b))
-                                for b in val_batches], weights=va_w))
-        history.append({"epoch": epoch,
-                        "train_loss": ep_loss / max(sum(tr_w), 1.0),
-                        "val_mse": val})
-        if verbose:
-            print(f"epoch {epoch}: train {history[-1]['train_loss']:.5f} val {val:.5f}")
-        if val < best_val:
-            best_val, best_params, patience = val, params, 0
-        else:
-            patience += 1
-            if patience >= tc.early_stop:
-                break
-    return FitResult(params=best_params, best_val=best_val, history=history,
-                     wall_time=time.time() - t0)
+    return run_fit(train_step, eval_step, params, opt.init(params), tc,
+                   train_batches, val_batches, verbose=verbose)

@@ -410,6 +410,54 @@ def test_pipeline_mesh_matches_prerefactor_dist_path():
 
 
 @pytest.mark.slow
+def test_streamed_dist_fit_matches_eager_fit():
+    """Acceptance criterion (mesh path, DESIGN.md §8): ``fit`` consuming
+    the ShardedBatch stream reproduces the per-step losses/history of the
+    same fit over the eagerly materialized list on a fixed seed — and a
+    second stream against a warm layout cache rebuilds zero layouts."""
+    out = _run_sub("""
+        import json, tempfile, jax, numpy as np
+        from repro.data import layout_cache as lc
+        from repro.data.fluid import generate_fluid_dataset
+        from repro.distributed.dist_egnn import make_gnn_mesh
+        from repro.pipeline import build_pipeline
+        from repro.training.trainer import TrainConfig
+
+        D = 2
+        data = generate_fluid_dataset(5, n_particles=100, seed=0)
+        tc = TrainConfig(lr=1e-3, lam_mmd=0.01, epochs=3, seed=0)
+
+        def run(materialized, cache_dir=None):
+            pipe = build_pipeline("fast_egnn", jax.random.PRNGKey(0),
+                                  mesh=make_gnn_mesh(D), train_cfg=tc,
+                                  n_layers=2, hidden=16, h_in=1,
+                                  n_virtual=2, s_dim=8)
+            tr = pipe.make_batches(data[:4], 2, r=0.06, cache_dir=cache_dir)
+            va = pipe.make_batches(data[4:], 1, r=0.06, cache_dir=cache_dir)
+            if materialized:
+                tr, va = tr.materialize(), va.materialize()
+            return pipe.fit(tr, va)
+
+        rs, re = run(False), run(True)
+        hist_eq = all(
+            abs(a["train_loss"] - b["train_loss"]) <= 1e-9 * abs(b["train_loss"])
+            and abs(a["val_mse"] - b["val_mse"]) <= 1e-9 * abs(b["val_mse"])
+            for a, b in zip(rs.history, re.history))
+        with tempfile.TemporaryDirectory() as td:
+            run(False, cache_dir=td)
+            lc.reset_cache_stats()
+            run(False, cache_dir=td)
+            warm = lc.cache_stats()
+        print(json.dumps(dict(n_epochs=[len(rs.history), len(re.history)],
+                              hist_eq=hist_eq, warm=warm)))
+    """, n_dev=2)
+    res = json.loads(out.strip().splitlines()[-1])
+    assert res["n_epochs"][0] == res["n_epochs"][1], res
+    assert res["hist_eq"], res
+    assert res["warm"]["builds"] == 0 and res["warm"]["hits"] > 0, res
+
+
+@pytest.mark.slow
 def test_dist_gradients_match_single_device():
     """The paper's custom differentiable all_reduce requirement: grads through
     the psum'd virtual aggregation must equal single-device grads."""

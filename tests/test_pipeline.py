@@ -234,6 +234,20 @@ def test_build_pipeline_mesh_requires_fast_egnn():
                        h_in=1)
 
 
+def test_make_batches_returns_stream():
+    """DESIGN.md §8: the factory's batches are a re-iterable, indexable
+    ``BatchStream`` — the one iterator contract behind fit."""
+    from repro.data.stream import BatchStream
+
+    pipe = build_pipeline("egnn", jax.random.PRNGKey(0), h_in=1, n_layers=2,
+                          hidden=8)
+    tr = pipe.make_batches(_data(4), 2)
+    assert isinstance(tr, BatchStream)
+    assert len(tr) == 2
+    assert len(list(iter(tr))) == 2  # iterate (async path)
+    assert tr[0].graph.x.shape[0] == 2  # index (materializes)
+
+
 def test_predict_batch_forward():
     data = _data(3)
     pipe = build_pipeline("egnn", jax.random.PRNGKey(0), h_in=1, n_layers=2,
