@@ -25,6 +25,8 @@ CLI::
         [--gate-dist]         # exit 1 unless the dist fused row dispatched
         [--gate-single-dispatch]  # same gate for the single-device pipeline
         [--gate-input-pipeline]   # exit 1 if a warm layout cache rebuilds
+        [--gate-virtual]      # exit 1 unless the fused virtual rows
+                              # dispatched with zero jnp fallbacks
 
 ``--gate-eligible`` is the CI regression gate for the banded-CSR tiling:
 it fails the bench-smoke job if the fused path ever loses eligibility at
@@ -49,8 +51,7 @@ from repro.core import message_passing as mp
 from repro.core.graph import make_graph
 from repro.core.mlp import init_mlp
 from repro.core.virtual_nodes import (VirtualState, init_virtual_block,
-                                      real_from_virtual, virtual_global_message,
-                                      virtual_messages, virtual_node_sums)
+                                      virtual_global_message, virtual_pathway)
 from repro.data.radius_graph import banded_csr_layout, sort_edges_by_receiver
 
 
@@ -61,6 +62,26 @@ def _time(fn, *args, reps: int = 5) -> float:
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / reps * 1e6
+
+
+def _memory_stats(fn, *args) -> dict:
+    """Compiled-memory footprint of a jitted callable (DESIGN.md §9).
+
+    XLA's ``memory_analysis()`` on the compiled executable: ``temp_bytes``
+    is the activation/intermediate buffer pool — the number that drops when
+    a fusion stops materialising the (E, hidden) / (N, C, hidden) message
+    tensors — and ``argument_bytes`` the operand pool.  ``None``s when the
+    backend doesn't expose the analysis (memory numbers are then simply
+    absent from the row, never fabricated).
+    """
+    try:
+        ma = jax.jit(fn).lower(*args).compile().memory_analysis()
+        return dict(
+            temp_bytes=int(ma.temp_size_in_bytes),
+            argument_bytes=int(ma.argument_size_in_bytes),
+            output_bytes=int(ma.output_size_in_bytes))
+    except Exception:  # pragma: no cover - backend-dependent
+        return dict(temp_bytes=None, argument_bytes=None, output_bytes=None)
 
 
 EDGE_BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
@@ -119,17 +140,20 @@ def run_edge(quick: bool = True, deg: int = 8, hid: int = 64,
         eligible = mp.kernel_supported(lp, g, spec)
         layout = banded_csr_layout(snd, rcv, n)
 
-        t_jnp = _time(jax.jit(lambda lp, h, x: mp.edge_pathway(
-            lp, h, x, g, spec)), lp, h, x)
-        t_kernel, mode = None, "ineligible"
+        jnp_fn = lambda lp, h, x: mp.edge_pathway(lp, h, x, g, spec)
+        t_jnp = _time(jax.jit(jnp_fn), lp, h, x)
+        mem_jnp = _memory_stats(jnp_fn, lp, h, x)
+        t_kernel, mode, mem_kernel = None, "ineligible", {}
         if eligible:
             mode = backend_mode()
             # interpret emulation is orders slower than compiled jnp: one
             # rep keeps the 64K row affordable while still recording a
             # real execution of the banded tiling
-            t_kernel = _time(jax.jit(lambda lp, h, x: mp.edge_pathway(
-                lp, h, x, g, spec, use_kernel=True)), lp, h, x,
-                reps=5 if on_tpu else 1)
+            kern_fn = lambda lp, h, x: mp.edge_pathway(
+                lp, h, x, g, spec, use_kernel=True)
+            t_kernel = _time(jax.jit(kern_fn), lp, h, x,
+                             reps=5 if on_tpu else 1)
+            mem_kernel = _memory_stats(kern_fn, lp, h, x)
         # HBM-traffic model: the unfused path writes + reads the (E, hid)
         # message tensor and the (E, 3) gated edge vectors
         saved = e * hid * 4 * 2 + e * 3 * 4 * 2
@@ -141,6 +165,10 @@ def run_edge(quick: bool = True, deg: int = 8, hid: int = 64,
             n=n, e=e, hidden=hid, jnp_us=t_jnp, kernel_us=t_kernel,
             kernel_eligible=eligible, kernel_mode=mode,
             fused_hbm_saving_bytes=saved,
+            jnp_temp_bytes=mem_jnp.get("temp_bytes"),
+            jnp_argument_bytes=mem_jnp.get("argument_bytes"),
+            kernel_temp_bytes=mem_kernel.get("temp_bytes"),
+            kernel_argument_bytes=mem_kernel.get("argument_bytes"),
             window=layout.window, swindow=layout.swindow,
             edge_blocks=int(layout.block_rwin.size),
             layout_fill=round(layout.fill, 4),
@@ -149,14 +177,14 @@ def run_edge(quick: bool = True, deg: int = 8, hid: int = 64,
     if json_path is None and not quick:
         json_path = EDGE_BENCH_JSON
     if json_path is not None:
-        # preserve the dispatch-mode rows other writers (table45, a previous
-        # --dist / --gate-single-dispatch run) merged into this file — the
-        # sweep only owns its own timing rows
+        # preserve every kind-tagged row other writers merged into this file
+        # (table45 / --dist / --gate-single-dispatch / --gate-virtual /
+        # --gate-input-pipeline) — the sweep only owns its own untagged
+        # timing rows
         old = _read_bench_json(json_path)
         payload = dict(backend=jax.default_backend(), deg=deg,
                        rows=list(rows) + [r for r in old.get("rows", [])
-                                          if r.get("kind") in ("dist_edge",
-                                                               "single_edge")])
+                                          if r.get("kind") is not None])
         with open(json_path, "w") as f:
             json.dump(payload, f, indent=2)
     return rows
@@ -390,11 +418,34 @@ def record_dist_rows(rows: list[dict], json_path: str = EDGE_BENCH_JSON) -> None
         json.dump(data, f, indent=2)
 
 
-def run(quick: bool = True):
-    sizes = [(4096, 3, 64)] if quick else [(4096, 3, 64), (16384, 5, 64),
-                                           (65536, 10, 64)]
-    for n, c, hid in sizes:
-        ks = jax.random.split(jax.random.PRNGKey(0), 6)
+VIRTUAL_FULL_SIZES = (1024, 8192)
+
+
+def run_virtual(quick: bool = True, c: int = 3, hid: int = 64,
+                sizes: tuple[int, ...] | None = None,
+                source: str = "kernel_bench") -> list[dict]:
+    """Fused virtual pathway (fwd + fused backward) vs the jnp composition.
+
+    For each graph size, both dispatch modes of
+    ``core.virtual_nodes.virtual_pathway`` are traced and timed through
+    ``jax.value_and_grad`` — so the fused rows exercise the Pallas
+    *backward* kernel, not just the forward — and the compiled
+    ``memory_analysis()`` is recorded per row: the jnp rows' ``temp_bytes``
+    carry the (N, C, hidden) message tensor (saved as a residual for the
+    backward); the fused rows must not (DESIGN.md §9).  Dispatch telemetry
+    (``virtual_kernel`` / ``virtual_jnp``) classifies each row's mode like
+    the edge rows — ``--gate-virtual`` asserts the fused row dispatched,
+    not merely that it ran.  Rows land in ``BENCH_edge_kernel.json`` as
+    ``kind='virtual'``.
+    """
+    from repro.kernels.runtime import backend_mode, default_interpret
+
+    on_tpu = not default_interpret()
+    if sizes is None:
+        sizes = (1024,) if quick else VIRTUAL_FULL_SIZES
+    rows = []
+    for n in sizes:
+        ks = jax.random.split(jax.random.PRNGKey(n), 6)
         x = jax.random.normal(ks[0], (n, 3))
         h = jax.random.normal(ks[1], (n, hid))
         z = jax.random.normal(ks[2], (c, 3))
@@ -403,20 +454,40 @@ def run(quick: bool = True):
         vb = init_virtual_block(ks[4], c, hid, hid, hid)
         vs = VirtualState(z=z, s=s)
         mv = virtual_global_message(z, x.mean(0))
+        msg_bytes = n * c * hid * 4  # the tensor the fusion never writes
 
-        @jax.jit
-        def unfused(vb, h, x):
-            msgs = virtual_messages(vb, h, x, vs, mv)
-            dx, mh = real_from_virtual(vb, x, vs, msgs)
-            dz, ms = virtual_node_sums(vb, x, vs, msgs, mask)
-            return dx, mh, dz, ms
+        for use_kernel in (False, True):
+            def loss(vb, h, x, _uk=use_kernel):
+                dx, mh, dz, ms = virtual_pathway(vb, h, x, vs, mv, mask,
+                                                 use_kernel=_uk)
+                return (jnp.sum(dx * dx) + jnp.sum(mh * mh)
+                        + jnp.sum(dz * dz) + jnp.sum(ms * ms))
 
-        t_unfused = _time(unfused, vb, h, x)
+            grad_fn = jax.value_and_grad(loss, argnums=(0, 1, 2))
+            mp.reset_dispatch_counts()
+            t_grad = _time(jax.jit(grad_fn), vb, h, x,
+                           reps=5 if (on_tpu or not use_kernel) else 1)
+            cnt = mp.dispatch_counts()
+            mem = _memory_stats(grad_fn, vb, h, x)
+            mode = ("jnp" if not use_kernel else
+                    backend_mode() if cnt.get("virtual_kernel", 0)
+                    and not cnt.get("virtual_jnp", 0) else "fallback")
+            emit(f"kernel/virtual_pathway_n{n}_c{c}_"
+                 f"{'fused' if use_kernel else 'jnp'}", t_grad,
+                 f"mode={mode};msg_tensor_bytes={msg_bytes};"
+                 f"temp_bytes={mem.get('temp_bytes')}")
+            rows.append(dict(
+                kind="virtual", source=source, d=1, n=n, c=c, hidden=hid,
+                use_kernel=use_kernel, dispatch_mode=mode, grad_us=t_grad,
+                virtual_kernel=cnt.get("virtual_kernel", 0),
+                virtual_jnp=cnt.get("virtual_jnp", 0),
+                msg_tensor_bytes=msg_bytes, **mem))
+    return rows
 
-        msg_bytes = n * c * hid * 4 * 2  # write+read of the message tensor
-        emit(f"kernel/virtual_pathway_n{n}_c{c}", t_unfused,
-             f"fused_hbm_saving_bytes={msg_bytes};"
-             f"arithmetic_intensity_gain={c*hid}x")
+
+def run(quick: bool = True):
+    """Back-compat alias for ``benchmarks.run``: the virtual sweep."""
+    return run_virtual(quick=quick)
 
 
 def main(argv: list[str] | None = None) -> int:
@@ -431,7 +502,12 @@ def main(argv: list[str] | None = None) -> int:
     p.add_argument("--gate-eligible", type=int, default=None, metavar="N",
                    help="exit 1 unless kernel_eligible at n=N (CI gate)")
     p.add_argument("--skip-virtual", action="store_true",
-                   help="edge sweep only (the CI bench-smoke job)")
+                   help="skip the virtual-pathway sweep")
+    p.add_argument("--gate-virtual", action="store_true",
+                   help="exit 1 unless the fused virtual rows dispatched to "
+                        "the kernel with zero jnp fallbacks (CI gate, "
+                        "DESIGN.md §9); runs a quick virtual sweep if "
+                        "--skip-virtual suppressed it")
     p.add_argument("--dist", type=int, default=None, metavar="D",
                    help="also run the DistEGNN per-shard fused path on D "
                         "forced host devices and record dist_kernel_mode rows")
@@ -455,16 +531,37 @@ def main(argv: list[str] | None = None) -> int:
 
     sizes = (tuple(int(s) for s in args.sizes.split(","))
              if args.sizes else None)
+    # same quick-mode policy everywhere: never mutate the committed artifact
+    # unless this is a full sweep or --json names a target explicitly
+    merge_json = args.json or (EDGE_BENCH_JSON if sizes is None else None)
+    virt_rows: list[dict] = []
     if not args.skip_virtual and not args.dist_only:
-        run(quick=sizes is not None)
+        virt_rows = run_virtual(quick=sizes is not None)
+        if merge_json is not None:
+            record_dist_rows(virt_rows, merge_json)
     rows = ([] if args.dist_only else
             run_edge(quick=sizes is not None, json_path=args.json, sizes=sizes))
 
+    if args.gate_virtual:
+        if not virt_rows:
+            virt_rows = run_virtual(quick=True)
+            if merge_json is not None:
+                record_dist_rows(virt_rows, merge_json)
+        fused = [r for r in virt_rows if r.get("use_kernel")]
+        ok = fused and all(r["dispatch_mode"] in ("interpret", "tpu")
+                           and r["virtual_jnp"] == 0 for r in fused)
+        if not ok:
+            print(f"GATE FAILED: fused virtual pathway did not dispatch "
+                  f"cleanly: {virt_rows}")
+            return 1
+        print(f"GATE OK: fused virtual pathway dispatched "
+              f"(mode={fused[0]['dispatch_mode']}, virtual_jnp=0) at "
+              f"n={[r['n'] for r in fused]}")
+
     if args.gate_single_dispatch:
         single_rows = run_single_dispatch()
-        single_json = args.json or (EDGE_BENCH_JSON if sizes is None else None)
-        if single_json is not None:
-            record_dist_rows(single_rows, single_json)
+        if merge_json is not None:
+            record_dist_rows(single_rows, merge_json)
         fused = [r for r in single_rows if r.get("use_kernel")]
         ok = fused and all(r["dispatch_mode"] in ("interpret", "tpu")
                            and r["regroups"] == 0 and r["layout_host"] > 0
@@ -478,9 +575,8 @@ def main(argv: list[str] | None = None) -> int:
 
     if args.gate_input_pipeline:
         ip_rows, ip_ok = run_input_pipeline()
-        ip_json = args.json or (EDGE_BENCH_JSON if sizes is None else None)
-        if ip_json is not None:
-            record_dist_rows(ip_rows, ip_json)
+        if merge_json is not None:
+            record_dist_rows(ip_rows, merge_json)
         if not ip_ok:
             print(f"GATE FAILED: warm layout-cache run still rebuilt "
                   f"layouts: {ip_rows}")
@@ -492,11 +588,8 @@ def main(argv: list[str] | None = None) -> int:
 
     if args.dist is not None:
         dist_rows = run_dist(d=args.dist)
-        # same quick-mode policy as run_edge: never mutate the committed
-        # artifact unless this is a full sweep or --json names it explicitly
-        dist_json = args.json or (EDGE_BENCH_JSON if sizes is None else None)
-        if dist_json is not None:
-            record_dist_rows(dist_rows, dist_json)
+        if merge_json is not None:
+            record_dist_rows(dist_rows, merge_json)
         if args.gate_dist:
             fused = [r for r in dist_rows if r.get("use_kernel")]
             ok = fused and all(r["dist_kernel_mode"] in ("interpret", "tpu")

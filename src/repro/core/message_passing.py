@@ -56,6 +56,10 @@ class EdgeSpec(NamedTuple):
     coord_clamp: clamp on the scalar gate (numerical stability).
     normalize:   divide segment sums by the masked receiver degree
                  (α_i = 1/|N(i)|); ``False`` → plain masked sum (cfconv).
+    precision:   kernel compute precision — ``'f32'`` (default) or
+                 ``'bf16'`` (bf16 compute, f32 accumulate; DESIGN.md §9).
+                 Only the fused Pallas path honours it; the jnp path always
+                 runs f32.
     """
 
     use_h: bool = True
@@ -65,6 +69,7 @@ class EdgeSpec(NamedTuple):
     rel: str = "raw"
     coord_clamp: float = math.inf
     normalize: bool = True
+    precision: str = "f32"
 
 
 class EdgePathwayOut(NamedTuple):
@@ -135,7 +140,8 @@ def _scaled_rel(rel: Array, d2: Array, spec: EdgeSpec) -> Array:
 # Tests and the distributed benches assert the fused path actually
 # dispatched — and, when a host layout is supplied, that zero trace-time
 # regroups happened — instead of inferring it from the absence of errors.
-# Events: 'edge_kernel' / 'edge_jnp' (this module), 'edge_layout_host' /
+# Events: 'edge_kernel' / 'edge_jnp' (this module), 'virtual_kernel' /
+# 'virtual_jnp' (core.virtual_nodes), 'edge_layout_host' /
 # 'edge_layout_regroup' (kernels.edge_message).  Because jit caches traces,
 # counts reflect *traces*, not executions: reset before building a fresh
 # jitted program to observe its dispatch decisions.

@@ -143,6 +143,59 @@ def virtual_node_sums(params, x: Array, vs: VirtualState, msgs: Array,
     return dz_sum, ms_sum
 
 
+def virtual_kernel_supported(params, h: Array) -> bool:
+    """Virtual-kernel dispatch rule (DESIGN.md §3.2).
+
+    The fused Pallas kernel implements exactly the per-channel stacked
+    2-layer MLP form of φ2 / φ_x^v / φ_Z (the ordered-set variant) with at
+    least one real feature column.  The shared 'Global Nodes' ablation
+    (rank-2 weights), deeper MLPs, and zero-width features fall back to the
+    jnp composition below.
+    """
+    for name in ("phi2", "phi_xv", "phi_z"):
+        p = params[name]
+        if len(p) != 2 or p[0]["w"].ndim != 3:
+            return False
+    return h.shape[-1] > 0
+
+
+def virtual_pathway(params, h: Array, x: Array, vs: VirtualState, mv: Array,
+                    node_mask: Array, *, use_kernel: bool = False,
+                    precision=None) -> tuple[Array, Array, Array, Array]:
+    """First-class virtual-pathway dispatch — the Eq. 5–9 hot path.
+
+    Returns ``(dx (N,3), mh (N,hidden), dz_sum (C,3), ms_sum (C,hidden))``:
+    the real-side terms of Eqs. 6–7 plus the local node sums feeding
+    Eqs. 8–9 / 16–17.  With ``use_kernel`` and a kernel-eligible parameter
+    block (:func:`virtual_kernel_supported`) this dispatches to the fused
+    Pallas kernel (``kernels.ops.virtual_pathway``) which never
+    materialises the (N, C, hidden) message tensor in HBM — including on
+    the backward pass (DESIGN.md §9); otherwise it runs the pure-jnp
+    composition.  Dispatch is recorded at trace time as
+    ``'virtual_kernel'`` / ``'virtual_jnp'`` in
+    ``message_passing.dispatch_counts()``.  ``precision`` selects the
+    kernel compute/accumulate dtypes (``kernels.runtime.resolve_precision``
+    — f32 default); the jnp path ignores it.
+
+    Under ``shard_map`` (DistEGNN) each shard calls this on its local
+    nodes; the returned sums are psum'd downstream in
+    :func:`virtual_aggregate_from_sums`.
+    """
+    from repro.core.message_passing import record_dispatch
+
+    if use_kernel and virtual_kernel_supported(params, h):
+        from repro.kernels import ops as kops
+
+        record_dispatch("virtual_kernel")
+        return kops.virtual_pathway(params, h, x, vs, mv, node_mask,
+                                    precision=precision)
+    record_dispatch("virtual_jnp")
+    msgs = virtual_messages(params, h, x, vs, mv)  # (N, C, hidden)
+    dx, mh = real_from_virtual(params, x, vs, msgs)
+    dz_sum, ms_sum = virtual_node_sums(params, x, vs, msgs, node_mask)
+    return dx, mh, dz_sum, ms_sum
+
+
 def virtual_aggregate_from_sums(
     params,
     vs: VirtualState,

@@ -2,9 +2,22 @@
 
 * unpacks the model's per-channel MLP parameter stacks into the kernels' flat
   weight layout (and precomputes the node-independent φ2 layer-1 constant);
-* attaches ``jax.custom_vjp`` backward passes that rematerialise through the
-  pure-jnp oracle (flash-style recompute) so the fused forward is trainable;
-* selects interpret mode automatically off-TPU.
+* attaches ``jax.custom_vjp`` backward passes that call the **fused Pallas
+  backward kernels** (DESIGN.md §9) — flash-attention-style recompute in
+  VMEM, so neither direction materialises an (E, hidden) or (N, C, hidden)
+  tensor; the pure-jnp oracles in ``kernels.ref`` remain the parity ground
+  truth for both directions but are no longer on the compute path;
+* threads the static precision contract (``kernels.runtime.Precision``)
+  into every kernel pair.
+
+Differentiability contract: coordinates, features, virtual state and all
+weights carry real gradients; integer edge endpoints get float0
+cotangents; **masks are not differentiated** — the edge mask, node mask and
+a threaded ``EdgeLayout`` (a host-built copy of the edge data) all receive
+zero cotangents, and the forward's ``deg`` output is constant w.r.t. every
+differentiable input.  Nothing in the repo differentiates a mask; the zero
+keeps the backward kernels free of the per-edge/per-node mask-gradient
+scatters the oracle's vjp would imply.
 """
 from __future__ import annotations
 
@@ -15,11 +28,12 @@ import jax.numpy as jnp
 import numpy as np
 from jax.dtypes import float0
 
-from repro.kernels import ref
-from repro.kernels.edge_message import edge_pathway_fused
-from repro.kernels.mmd_rbf import mmd_cross_sum
-from repro.kernels.runtime import default_interpret as _interpret
-from repro.kernels.virtual_message import virtual_pathway_fused
+from repro.kernels.edge_message import (edge_pathway_bwd_fused,
+                                        edge_pathway_fused)
+from repro.kernels.mmd_rbf import mmd_cross_grads, mmd_cross_sum
+from repro.kernels.runtime import resolve_precision
+from repro.kernels.virtual_message import (virtual_pathway_bwd_fused,
+                                           virtual_pathway_fused)
 
 Array = jax.Array
 
@@ -27,59 +41,61 @@ Array = jax.Array
 # ------------------------------------------------------------------- edge MP
 @functools.lru_cache(maxsize=None)
 def _edge_custom(gate_mode: str, rel_mode: str, clamp: float,
-                 with_layout: bool = False):
+                 with_layout: bool = False, precision=None):
     """Per-variant custom_vjp wrapper (cached so jit caches stay warm).
 
     Forward: fused Pallas kernel — banded-CSR tiled, so any graph size the
     VMEM-budget check admits dispatches here; the banded regrouping runs
     inside the fused forward at trace time, or is skipped entirely when
     ``with_layout`` threads a host-precomputed ``EdgeLayout`` through as an
-    extra (non-differentiable) operand.  Backward: rematerialise through
-    the pure-jnp oracle on the *original* (un-regrouped) edge list
-    (flash-style recompute — no (E, hidden) residuals).  Integer edge
-    indices get float0 cotangents; the layout — a host-built *copy* of the
-    edge data, never something gradients are asked for — gets zeros.
+    extra (non-differentiable) operand.  Backward: the fused two-pass
+    Pallas backward (``edge_pathway_bwd_fused``) over the same banded
+    blocks — the only residual is the forward's ``deg`` column; messages
+    and gates are recomputed in VMEM.  Integer edge indices get float0
+    cotangents; the edge mask and the layout get zeros (module docstring).
     """
+    prec = resolve_precision(precision)
+    kw = dict(gate_mode=gate_mode, rel_mode=rel_mode, clamp=clamp,
+              precision=prec)
 
     if with_layout:
 
         @jax.custom_vjp
         def f(x, h, snd, rcv, em, lay, *ws):
-            return edge_pathway_fused(x, h, snd, rcv, em, *ws,
-                                      gate_mode=gate_mode, rel_mode=rel_mode,
-                                      clamp=clamp, interpret=_interpret(),
-                                      layout=lay)
+            return edge_pathway_fused(x, h, snd, rcv, em, *ws, layout=lay,
+                                      **kw)
 
     else:
 
         @jax.custom_vjp
         def f(x, h, snd, rcv, em, *ws):
-            return edge_pathway_fused(x, h, snd, rcv, em, *ws,
-                                      gate_mode=gate_mode, rel_mode=rel_mode,
-                                      clamp=clamp, interpret=_interpret())
+            return edge_pathway_fused(x, h, snd, rcv, em, *ws, **kw)
 
     def fwd(*args):
-        return f(*args), args
+        out = f(*args)
+        return out, (args, out[2])  # deg: the only non-primal residual
 
     def bwd(res, cots):
+        args, deg = res
         if with_layout:
-            x, h, snd, rcv, em, lay, *ws = res
+            x, h, snd, rcv, em, lay, *ws = args
         else:
-            x, h, snd, rcv, em, *ws = res
-        _, vjp = jax.vjp(
-            lambda x, h, em, *ws: ref.edge_pathway_ref(
-                x, h, snd, rcv, em, *ws,
-                gate_mode=gate_mode, rel_mode=rel_mode, clamp=clamp),
-            x, h, em, *ws)
-        gx, gh, gem, *gws = vjp(cots)
+            x, h, snd, rcv, em, *ws = args
+            lay = None
+        g_dx, g_mh, _g_deg = cots  # deg is constant w.r.t. x/h/weights
+        grads = edge_pathway_bwd_fused(x, h, snd, rcv, em, *ws, deg,
+                                       g_dx, g_mh, layout=lay, **kw)
+        gx, gh, *gws = (g.astype(p.dtype)
+                        for g, p in zip(grads, (x, h, *ws)))
         zint = lambda a: np.zeros(a.shape, dtype=float0)
         if with_layout:
             glay = type(lay)(zint(lay.senders), zint(lay.receivers),
                              jnp.zeros_like(lay.edge_mask),
                              zint(lay.block_rwin), zint(lay.block_swin),
                              meta=lay.meta)
-            return (gx, gh, zint(snd), zint(rcv), gem, glay, *gws)
-        return (gx, gh, zint(snd), zint(rcv), gem, *gws)
+            return (gx, gh, zint(snd), zint(rcv), jnp.zeros_like(em),
+                    glay, *gws)
+        return (gx, gh, zint(snd), zint(rcv), jnp.zeros_like(em), *gws)
 
     f.defvjp(fwd, bwd)
     return f
@@ -130,41 +146,54 @@ def edge_pathway(lp, h: Array, x: Array, g, spec,
     dispatch here rather than falling back to jnp).
 
     ``layout`` threads a host-precomputed ``EdgeLayout`` into the fused
-    forward (zero trace-time regrouping); the original edge list stays the
-    backward oracle's input either way.
+    forward *and* backward (zero trace-time regrouping in either
+    direction).  ``spec.precision`` selects the compute/accumulate pair.
     """
     hk, ws = unpack_edge_params(lp, h, spec)
+    prec = resolve_precision(getattr(spec, "precision", None))
     if layout is not None:
-        f = _edge_custom(spec.gate, spec.rel, float(spec.coord_clamp), True)
+        f = _edge_custom(spec.gate, spec.rel, float(spec.coord_clamp), True,
+                         prec)
         dx, mh, _deg = f(x, hk, g.senders, g.receivers, g.edge_mask,
                          layout, *ws)
     else:
-        f = _edge_custom(spec.gate, spec.rel, float(spec.coord_clamp))
+        f = _edge_custom(spec.gate, spec.rel, float(spec.coord_clamp), False,
+                         prec)
         dx, mh, _deg = f(x, hk, g.senders, g.receivers, g.edge_mask, *ws)
     return dx, mh
 
 
 # ---------------------------------------------------------------- virtual MP
-_N_WEIGHT_ARGS = 15  # x, h, z, mask + 11 weight tensors
+@functools.lru_cache(maxsize=None)
+def _virtual_custom(precision=None):
+    """Per-precision custom_vjp wrapper for the fused virtual pathway.
 
+    Backward: the fused node-blocked Pallas backward
+    (``virtual_pathway_bwd_fused``) — per-channel activations are
+    recomputed in VMEM, dL/dz and every per-channel weight gradient
+    accumulate across the sequential grid.  The node mask gets a zero
+    cotangent (module docstring); the const1 cotangent flows back to
+    s/m^v/b1 through the traced :func:`unpack_virtual_block`.
+    """
+    prec = resolve_precision(precision)
 
-@jax.custom_vjp
-def _fused_vp(x, h, z, mask, w1h, w1d, c1, w2, b2, wg1, bg1, wg2, wz1, bz1, wz2):
-    return virtual_pathway_fused(x, h, z, mask, w1h, w1d, c1, w2, b2,
-                                 wg1, bg1, wg2, wz1, bz1, wz2,
-                                 interpret=_interpret())
+    @jax.custom_vjp
+    def f(x, h, z, mask, *ws):  # ws: the 11 per-channel weight stacks
+        return virtual_pathway_fused(x, h, z, mask, *ws, precision=prec)
 
+    def fwd(*args):
+        return f(*args), args
 
-def _fused_vp_fwd(*args):
-    return _fused_vp(*args), args
+    def bwd(res, cots):
+        x, h, z, mask, *ws = res
+        grads = virtual_pathway_bwd_fused(x, h, z, mask, *ws, *cots,
+                                          precision=prec)
+        gx, gh, gz, *gws = (g.astype(p.dtype)
+                            for g, p in zip(grads, (x, h, z, *ws)))
+        return (gx, gh, gz, jnp.zeros_like(mask), *gws)
 
-
-def _fused_vp_bwd(residuals, cots):
-    _, vjp = jax.vjp(ref.virtual_pathway_ref, *residuals)
-    return vjp(cots)
-
-
-_fused_vp.defvjp(_fused_vp_fwd, _fused_vp_bwd)
+    f.defvjp(fwd, bwd)
+    return f
 
 
 def unpack_virtual_block(vb, s: Array, mv: Array, h_dim: int):
@@ -194,13 +223,17 @@ def unpack_virtual_block(vb, s: Array, mv: Array, h_dim: int):
     )
 
 
-def virtual_pathway(vb, h: Array, x: Array, vs, mv: Array, node_mask: Array):
+def virtual_pathway(vb, h: Array, x: Array, vs, mv: Array, node_mask: Array,
+                    precision=None):
     """Kernel-backed replacement for the jnp virtual pathway in FastEGNN.
 
-    Returns (dx (N,3), mh (N,hid), dz_sum (C,3), ms_sum (C,hid)).
+    Returns (dx (N,3), mh (N,hid), dz_sum (C,3), ms_sum (C,hid)); fused
+    Pallas on both directions.  ``precision`` must be static (a string or
+    ``runtime.Precision``).
     """
     w = unpack_virtual_block(vb, vs.s, mv, h.shape[-1])
-    return _fused_vp(
+    f = _virtual_custom(resolve_precision(precision))
+    return f(
         x, h, vs.z, node_mask,
         w["w1h"], w["w1d"], w["const1"], w["w2"], w["b2"],
         w["wg1"], w["bg1"], w["wg2"], w["wz1"], w["bz1"], w["wz2"],
@@ -212,21 +245,22 @@ def virtual_pathway(vb, h: Array, x: Array, vs, mv: Array, node_mask: Array):
 def _mmd_cross_custom(sigma: float):
     """Per-sigma custom_vjp wrapper (sigma must stay *static* — a traced
     operand would break ``float(sigma)`` inside the jitted kernel under
-    vmap/grad; cached like ``_edge_custom`` so jit caches stay warm)."""
+    vmap/grad; cached like ``_edge_custom`` so jit caches stay warm).
+    Backward: the fused ``mmd_cross_grads`` kernel (the (N, C) kernel
+    matrix is recomputed per block, never materialised); the mask weight
+    gets a zero cotangent."""
 
     @jax.custom_vjp
     def f(x, z, mask):
-        return mmd_cross_sum(x, z, mask, sigma=sigma, interpret=_interpret())
+        return mmd_cross_sum(x, z, mask, sigma=sigma)
 
     def fwd(x, z, mask):
         return f(x, z, mask), (x, z, mask)
 
     def bwd(res, cot):
         x, z, mask = res
-        _, vjp = jax.vjp(
-            lambda xx, zz, mm: ref.mmd_cross_ref(xx, zz, mm, sigma),
-            x, z, mask)
-        return vjp(cot)
+        dx, dz = mmd_cross_grads(x, z, mask, cot, sigma=sigma)
+        return dx.astype(x.dtype), dz.astype(z.dtype), jnp.zeros_like(mask)
 
     f.defvjp(fwd, bwd)
     return f
@@ -237,7 +271,7 @@ def mmd_cross(x: Array, z: Array, weight: Array, sigma: float) -> Array:
 
     The trainable entry point ``core.mmd.mmd_loss(use_kernel=True)`` routes
     its cross term through (``weight`` is the node mask, or all-ones for a
-    sampled subset); backward remats through ``ref.mmd_cross_ref``.
+    sampled subset); backward is the fused ``mmd_cross_grads`` kernel.
     """
     return _mmd_cross_custom(float(sigma))(x, z, weight)
 

@@ -19,6 +19,7 @@ MPNN_EDGE_SPEC = EdgeSpec(use_h=True, use_d2=False, gate="none")
 
 class LinearConfig(NamedTuple):
     use_kernel: bool = False  # no edge pathway: accepted for registry uniformity
+    precision: str = "f32"  # likewise accepted for registry uniformity
 
 
 def init_linear_dyn(key, cfg: LinearConfig):
@@ -35,6 +36,7 @@ class MPNNConfig(NamedTuple):
     hidden: int = 64
     h_in: int = 1
     use_kernel: bool = False  # dispatch the edge pathway to the Pallas kernel
+    precision: str = "f32"  # kernel compute precision ('f32' | 'bf16')
 
 
 def init_mpnn(key, cfg: MPNNConfig):
@@ -57,7 +59,8 @@ def mpnn_apply(params, cfg: MPNNConfig, g: GeometricGraph,
                edge_layout=None) -> Array:
     z = mlp(params["embed"], jnp.concatenate([g.h, g.x, g.v], axis=-1))
     for lp in params["layers"]:
-        _, agg = edge_pathway({"phi1": lp["msg"]}, z, g.x, g, MPNN_EDGE_SPEC,
+        _, agg = edge_pathway({"phi1": lp["msg"]}, z, g.x, g,
+                              MPNN_EDGE_SPEC._replace(precision=cfg.precision),
                               use_kernel=cfg.use_kernel, layout=edge_layout)
         z = z + mlp(lp["upd"], jnp.concatenate([z, agg], axis=-1))
     return g.x + mlp(params["dec"], z)

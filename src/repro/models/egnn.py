@@ -28,13 +28,15 @@ class EGNNConfig(NamedTuple):
     # clamp on coordinate updates for numerical stability on large graphs
     coord_clamp: float = 100.0
     use_kernel: bool = False  # dispatch the edge pathway to the Pallas kernel
+    precision: str = "f32"  # kernel compute precision ('f32' | 'bf16')
 
 
-def edge_spec(coord_clamp: float) -> EdgeSpec:
+def edge_spec(coord_clamp: float, precision: str = "f32") -> EdgeSpec:
     """Eq. 3 + Eqs. 6-7 real-real terms: full φ1 over [h_i|h_j|d²|e_ij],
     MLP coordinate gate, masked-mean aggregation."""
     return EdgeSpec(use_h=True, use_d2=True, use_edge_attr=True, gate="mlp",
-                    rel="raw", coord_clamp=coord_clamp, normalize=True)
+                    rel="raw", coord_clamp=coord_clamp, normalize=True,
+                    precision=precision)
 
 
 def init_egnn_layer(key, cfg: EGNNConfig):
@@ -61,15 +63,15 @@ def init_egnn(key, cfg: EGNNConfig):
 
 def real_real_pathway(lp, h: Array, x: Array, g: GeometricGraph,
                       coord_clamp: float, use_kernel: bool = False,
-                      edge_layout=None):
+                      edge_layout=None, precision: str = "f32"):
     """Eq. 3 messages + real-real parts of Eqs. 6-7 with α_i = 1/|N(i)|.
 
     ``edge_layout`` optionally carries the host-precomputed banded layout
     (``kernels.edge_message.EdgeLayout``) into the fused kernel — the
     DistEGNN per-shard path (DESIGN.md §6.6)."""
     return edge_pathway({"phi1": lp["phi1"], "gate": lp["phi_xr"]}, h, x, g,
-                        edge_spec(coord_clamp), use_kernel=use_kernel,
-                        layout=edge_layout)
+                        edge_spec(coord_clamp, precision),
+                        use_kernel=use_kernel, layout=edge_layout)
 
 
 def egnn_apply(params, cfg: EGNNConfig, g: GeometricGraph,
@@ -83,7 +85,8 @@ def egnn_apply(params, cfg: EGNNConfig, g: GeometricGraph,
     x = g.x
     for lp in params["layers"]:
         dx, mh = real_real_pathway(lp, h, x, g, cfg.coord_clamp, cfg.use_kernel,
-                                   edge_layout=edge_layout)
+                                   edge_layout=edge_layout,
+                                   precision=cfg.precision)
         if cfg.velocity:
             dx = dx + mlp(lp["phi_v"], h) * g.v  # φ_v(h_i)·v_i^(0)
         x = x + dx * g.node_mask[:, None]

@@ -20,11 +20,9 @@ from repro.core.virtual_nodes import (
     init_virtual_block,
     init_virtual_coords,
     masked_com,
-    real_from_virtual,
     virtual_aggregate_from_sums,
     virtual_global_message,
-    virtual_messages,
-    virtual_node_sums,
+    virtual_pathway,
 )
 from repro.models.egnn import EGNNConfig, real_real_pathway
 
@@ -45,6 +43,9 @@ class FastEGNNConfig(NamedTuple):
     # Table II ablation: share one weight set across channels (unordered
     # "Global Nodes" variant — strictly weaker, kept for the benchmark)
     shared_virtual: bool = False
+    # kernel compute precision ('f32' | 'bf16'); bf16 computes in bfloat16
+    # with f32 accumulation inside the fused kernels (DESIGN.md §9)
+    precision: str = "f32"
 
     def egnn(self) -> EGNNConfig:
         return EGNNConfig(
@@ -54,6 +55,7 @@ class FastEGNNConfig(NamedTuple):
             edge_attr_dim=self.edge_attr_dim,
             velocity=self.velocity,
             coord_clamp=self.coord_clamp,
+            precision=self.precision,
         )
 
 
@@ -84,24 +86,6 @@ def init_fast_egnn(key, cfg: FastEGNNConfig):
     }
 
 
-def _virtual_pathway(vb, h, x, vs, mv, node_mask, cfg: FastEGNNConfig):
-    """Fused virtual pathway: real-side terms + virtual-side node sums.
-
-    Returns (dx_v (N,3), mh_v (N,hid), dz_sum (C,3), ms_sum (C,hid)).
-    Dispatches to the fused Pallas kernel when ``cfg.use_kernel`` — same math,
-    validated against this pure-jnp path in tests/test_kernels.py.  The fusion
-    never materialises the (N, C, hidden) message tensor in HBM.
-    """
-    if cfg.use_kernel:
-        from repro.kernels import ops as kops
-
-        return kops.virtual_pathway(vb, h, x, vs, mv, node_mask)
-    msgs = virtual_messages(vb, h, x, vs, mv)  # (N, C, hid)
-    dx_v, mh_v = real_from_virtual(vb, x, vs, msgs)
-    dz_sum, ms_sum = virtual_node_sums(vb, x, vs, msgs, node_mask)
-    return dx_v, mh_v, dz_sum, ms_sum
-
-
 def fast_egnn_apply(
     params,
     cfg: FastEGNNConfig,
@@ -127,11 +111,13 @@ def fast_egnn_apply(
     for lp in params["layers"]:
         com = masked_com(x, g.node_mask, axis_name)  # Alg. 1 line 4
         mv = virtual_global_message(vs.z, com)  # Eq. 4
-        dx_v, mh_v, dz_sum, ms_sum = _virtual_pathway(
-            lp["virtual"], h, x, vs, mv, g.node_mask, cfg)  # Eq. 5
+        dx_v, mh_v, dz_sum, ms_sum = virtual_pathway(
+            lp["virtual"], h, x, vs, mv, g.node_mask,
+            use_kernel=cfg.use_kernel, precision=cfg.precision)  # Eq. 5
         dx_r, mh_r = real_real_pathway(lp, h, x, g, cfg.coord_clamp,
                                        cfg.use_kernel,
-                                       edge_layout=edge_layout)  # Eqs. 3, 6-7
+                                       edge_layout=edge_layout,
+                                       precision=cfg.precision)  # Eqs. 3, 6-7
         # clamp the virtual term like the real-real term (official EGNN
         # practice): an unbounded gate feeds the |x|→|d²| runaway loop.
         # Norm rescale, not componentwise clip — the clip box is

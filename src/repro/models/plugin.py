@@ -23,11 +23,10 @@ from repro.core.virtual_nodes import (
     VirtualState,
     init_virtual_block,
     masked_com,
-    real_from_virtual,
     virtual_aggregate_from_sums,
     virtual_global_message,
-    virtual_messages,
-    virtual_node_sums,
+    virtual_kernel_supported,
+    virtual_pathway,
 )
 
 Array = jax.Array
@@ -38,10 +37,9 @@ def init_plugin(key, n_virtual: int, h_dim: int, s_dim: int, hidden: int):
 
 
 def kernel_supported(vb, h: Array) -> bool:
-    """Virtual-kernel dispatch rule (DESIGN.md §3.2): per-channel stacked
-    parameters (the ordered-set form; the shared 'Global Nodes' ablation is
-    rank-2) and at least one real feature column."""
-    return vb["phi2"][0]["w"].ndim == 3 and h.shape[-1] > 0
+    """Back-compat alias of :func:`core.virtual_nodes.virtual_kernel_supported`
+    — the single home of the virtual-kernel dispatch rule (DESIGN.md §3.2)."""
+    return virtual_kernel_supported(vb, h)
 
 
 def virtual_plugin_step(
@@ -53,6 +51,7 @@ def virtual_plugin_step(
     axis_name: Optional[str] = None,
     coord_clamp: float = 10.0,
     use_kernel: bool = False,
+    precision: str = "f32",
 ) -> tuple[Array, Array, VirtualState]:
     """One layer of the auxiliary virtual pathway.
 
@@ -65,15 +64,9 @@ def virtual_plugin_step(
     """
     com = masked_com(x, node_mask, axis_name)
     mv = virtual_global_message(vs.z, com)
-    if use_kernel and kernel_supported(vb, h):
-        from repro.kernels import ops as kops
-
-        dx_v, mh_v, dz_sum, ms_sum = kops.virtual_pathway(
-            vb, h, x, vs, mv, node_mask)
-    else:
-        msgs = virtual_messages(vb, h, x, vs, mv)
-        dx_v, mh_v = real_from_virtual(vb, x, vs, msgs)
-        dz_sum, ms_sum = virtual_node_sums(vb, x, vs, msgs, node_mask)
+    dx_v, mh_v, dz_sum, ms_sum = virtual_pathway(
+        vb, h, x, vs, mv, node_mask, use_kernel=use_kernel,
+        precision=precision)
     dx_v = clamp_vector_norm(dx_v, coord_clamp)
     vs_new = virtual_aggregate_from_sums(vb, vs, dz_sum, ms_sum,
                                          jnp.sum(node_mask), axis_name)

@@ -27,16 +27,18 @@ class RFConfig(NamedTuple):
     velocity: bool = True
     coord_clamp: float = 100.0
     use_kernel: bool = False  # dispatch edge + virtual pathways to Pallas
+    precision: str = "f32"  # kernel compute precision ('f32' | 'bf16')
 
 
-def edge_spec(coord_clamp: float) -> EdgeSpec:
+def edge_spec(coord_clamp: float, precision: str = "f32") -> EdgeSpec:
     """Köhler-style normalised radial field: geometry-only φ (no node
     features), the width-1 message *is* the gate, and the pair direction is
     scaled by 1/(‖r‖+1) so far-apart pairs can't produce
     distance-proportional updates (raw rel·gate diverges on dense far-field
     graphs)."""
     return EdgeSpec(use_h=False, use_d2=True, gate="identity", rel="inv1p",
-                    coord_clamp=coord_clamp, normalize=True)
+                    coord_clamp=coord_clamp, normalize=True,
+                    precision=precision)
 
 
 def init_rf(key, cfg: RFConfig):
@@ -61,14 +63,15 @@ def rf_apply(params, cfg: RFConfig, g: GeometricGraph,
         vs = VirtualState(z=z0, s=jnp.zeros((cfg.n_virtual, 0), x.dtype))
     h_empty = jnp.zeros((n, 0), x.dtype)
 
-    spec = edge_spec(cfg.coord_clamp)
+    spec = edge_spec(cfg.coord_clamp, cfg.precision)
     for lp in params["layers"]:
         dx, _ = edge_pathway({"phi1": lp["phi"]}, h_empty, x, g, spec,
                              use_kernel=cfg.use_kernel, layout=edge_layout)
         if cfg.n_virtual > 0:
             dx_v, _, vs = virtual_plugin_step(lp["virtual"], h_empty, x, vs,
                                               g.node_mask, axis_name,
-                                              use_kernel=cfg.use_kernel)
+                                              use_kernel=cfg.use_kernel,
+                                              precision=cfg.precision)
             dx = dx + dx_v
         if cfg.velocity:
             dx = dx + g.v  # RF integrates the initial velocity directly

@@ -33,13 +33,15 @@ class SchNetConfig(NamedTuple):
     velocity: bool = True
     coord_clamp: float = 100.0
     use_kernel: bool = False  # dispatch coord head + virtual path to Pallas
+    precision: str = "f32"  # kernel compute precision ('f32' | 'bf16')
 
 
-def edge_spec(coord_clamp: float) -> EdgeSpec:
+def edge_spec(coord_clamp: float, precision: str = "f32") -> EdgeSpec:
     """Eq. 13 coordinate head: φ(h_i, h_j, d²) emits the scalar gate
     directly (identity gate), masked-mean aggregation."""
     return EdgeSpec(use_h=True, use_d2=True, gate="identity", rel="raw",
-                    coord_clamp=coord_clamp, normalize=True)
+                    coord_clamp=coord_clamp, normalize=True,
+                    precision=precision)
 
 
 def ssp(x):
@@ -88,7 +90,7 @@ def schnet_apply(params, cfg: SchNetConfig, g: GeometricGraph,
         z0 = init_virtual_coords(x, g.node_mask, cfg.n_virtual, axis_name)
         vs = VirtualState(z=z0, s=params["s_init"])
 
-    spec = edge_spec(cfg.coord_clamp)
+    spec = edge_spec(cfg.coord_clamp, cfg.precision)
     for lp in params["layers"]:
         _, d2 = edge_rel_d2(x, g)
         d = jnp.sqrt(d2[:, 0] + 1e-12)
@@ -104,7 +106,8 @@ def schnet_apply(params, cfg: SchNetConfig, g: GeometricGraph,
         if cfg.n_virtual > 0:
             dx_v, _, vs = virtual_plugin_step(lp["virtual"], h, x, vs,
                                               g.node_mask, axis_name,
-                                              use_kernel=cfg.use_kernel)
+                                              use_kernel=cfg.use_kernel,
+                                              precision=cfg.precision)
             dx = dx + dx_v
         if cfg.velocity:
             dx = dx + mlp(lp["phi_v"], h) * g.v

@@ -40,6 +40,12 @@ class TrainConfig(NamedTuple):
     mmd_sigma: float = 1.5
     mmd_sample: Optional[int] = 3
     seed: int = 0
+    # static loss scaling for reduced-precision compute (DESIGN.md §9):
+    # the loss is multiplied by this before differentiation and the grads
+    # divided after, pushing small bf16 cotangents away from the underflow
+    # boundary.  1.0 (the f32 default) is the identity — reported metrics
+    # are always unscaled.
+    loss_scale: float = 1.0
 
 
 def _batch_mean(values, sample_mask):
@@ -83,9 +89,18 @@ def build_train_step(apply_full: Callable, cfg_model, tc: TrainConfig, opt: Adam
         sm = getattr(batch, "sample_mask", None)
         return _batch_mean(losses, sm), _batch_mean(parts, sm)
 
+    scale = float(tc.loss_scale)
+
+    def scaled_loss(params, batch, key):
+        loss, parts = batch_loss(params, batch, key)
+        return loss * scale, (loss, parts)
+
     @jax.jit
     def train_step(params, opt_state, batch, key):
-        (loss, parts), grads = jax.value_and_grad(batch_loss, has_aux=True)(params, batch, key)
+        (_, (loss, parts)), grads = jax.value_and_grad(
+            scaled_loss, has_aux=True)(params, batch, key)
+        if scale != 1.0:
+            grads = jax.tree.map(lambda g: g / scale, grads)
         params, opt_state = opt.update(grads, opt_state, params)
         parts = dict(parts)
         parts["loss"] = loss
