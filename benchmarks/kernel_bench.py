@@ -27,6 +27,8 @@ CLI::
         [--gate-input-pipeline]   # exit 1 if a warm layout cache rebuilds
         [--gate-virtual]      # exit 1 unless the fused virtual rows
                               # dispatched with zero jnp fallbacks
+        [--gate-rollout]      # exit 1 unless steady-state rollout ran with
+                              # zero host round-trips and zero recompiles
 
 ``--gate-eligible`` is the CI regression gate for the banded-CSR tiling:
 it fails the bench-smoke job if the fused path ever loses eligibility at
@@ -35,6 +37,12 @@ the per-shard fused path (DESIGN.md §6.6); ``--gate-single-dispatch`` is
 its single-device twin — the pipeline train step over layout-carrying
 ``GraphBatch``es must consume the host layout with zero trace-time
 regroups (DESIGN.md §7), recorded as ``kind='single_edge'`` rows.
+``--gate-rollout`` runs ``Pipeline.rollout`` through the device-resident
+engine at n ∈ {1024, 8192} (``kind='rollout'`` rows: steps/s, rebuilds
+per 100 steps, engine-counted — no ``jax.profiler`` — host-transfer
+bytes) and fails unless the steady state moved zero device→host bytes,
+retraced zero times, and dispatched at most ``2·rebuilds + 2`` jit calls
+(DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -485,6 +493,66 @@ def run_virtual(quick: bool = True, c: int = 3, hid: int = 64,
     return rows
 
 
+ROLLOUT_SIZES = (1024, 8192)
+
+
+def run_rollout(sizes: tuple[int, ...] | None = None, steps: int = 40,
+                use_kernel: bool = False,
+                source: str = "kernel_bench") -> list[dict]:
+    """Device-resident rollout engine rows (DESIGN.md §10).
+
+    Rolls ``Pipeline.rollout`` ``steps`` steps at each size and records
+    ``kind='rollout'`` rows: steps/s, rebuilds per 100 steps, and the
+    engine's own transfer/retrace accounting (profiler-free — the engine
+    counts every array it moves, so the numbers hold on any backend).  A
+    2-step warmup call on the *cached* engine pays the chunk compile and
+    the first graph build; the timed run then demonstrates the contract:
+    ``steady_state_d2h_bytes == 0`` (the while_loop body never leaves the
+    device), ``recompiles == 0`` (capacity-stable rebuilds), and
+    ``chunk_calls ≤ 2·rebuilds + 2`` (jit dispatch only at rebuild
+    boundaries).  ``--gate-rollout`` asserts exactly those three.
+    """
+    from repro.pipeline import build_pipeline
+
+    rows = []
+    for n in sizes or ROLLOUT_SIZES:
+        rng = np.random.default_rng(0)
+        x0 = rng.uniform(0.0, 1.0, (n, 3)).astype(np.float32)
+        v0 = (0.01 * rng.standard_normal((n, 3))).astype(np.float32)
+        h = np.ones((n, 1), np.float32)
+        # cutoff for ~8 expected neighbours in the unit cube
+        r = float((8 * 3.0 / (4.0 * np.pi * n)) ** (1.0 / 3.0))
+        pipe = build_pipeline("fast_egnn", jax.random.PRNGKey(0),
+                              n_layers=2, hidden=32, h_in=1, n_virtual=3,
+                              s_dim=16, use_kernel=use_kernel)
+        # wrap_box=1.0: the scene lives on the unit torus, so the
+        # untrained model's chaotic step map stays bounded over the whole
+        # horizon (unwrapped it overflows f32 within ~12 steps)
+        kw = dict(r=r, skin=0.5 * r, dt=0.01, drop_rate=0.25,
+                  edge_cap=32 * n, wrap_box=1.0)
+        # compile + first build: traj_capacity pre-sizes the trajectory
+        # buffer so the timed run dispatches the exact compiled program
+        pipe.rollout(pipe.params, (x0, v0, h), 2, traj_capacity=steps, **kw)
+        t0 = time.perf_counter()
+        res = pipe.rollout(pipe.params, (x0, v0, h), steps, **kw)
+        wall = time.perf_counter() - t0
+        row = dict(kind="rollout", source=source, d=1, n=n,
+                   use_kernel=use_kernel, steps=steps,
+                   steps_per_s=steps / wall,
+                   rebuild_count=res.rebuild_count,
+                   rebuilds_per_100=100.0 * res.rebuild_count / steps,
+                   rebuild_waits=res.rebuild_waits,
+                   chunk_calls=res.chunk_calls, recompiles=res.recompiles,
+                   d2h_bytes=res.d2h_bytes, h2d_bytes=res.h2d_bytes,
+                   steady_state_d2h_bytes=res.steady_state_d2h_bytes)
+        rows.append(row)
+        emit(f"kernel/rollout_n{n}", row["steps_per_s"],
+             f"steps_per_s;rebuilds_per_100={row['rebuilds_per_100']:.1f};"
+             f"steady_d2h={row['steady_state_d2h_bytes']};"
+             f"recompiles={row['recompiles']}")
+    return rows
+
+
 def run(quick: bool = True):
     """Back-compat alias for ``benchmarks.run``: the virtual sweep."""
     return run_virtual(quick=quick)
@@ -527,6 +595,12 @@ def main(argv: list[str] | None = None) -> int:
                         "prefetch-overlap throughput rows, and exit 1 if a "
                         "warm cache run still rebuilds layouts (CI gate, "
                         "DESIGN.md §8)")
+    p.add_argument("--gate-rollout", action="store_true",
+                   help="run the device-resident rollout engine at "
+                        f"n={list(ROLLOUT_SIZES)} and exit 1 unless the "
+                        "steady state moved zero device→host bytes, "
+                        "retraced zero times, and dispatched ≤ 2·rebuilds+2 "
+                        "chunks (CI gate, DESIGN.md §10)")
     args = p.parse_args(argv)
 
     sizes = (tuple(int(s) for s in args.sizes.split(","))
@@ -585,6 +659,23 @@ def main(argv: list[str] | None = None) -> int:
         print(f"GATE OK: warm layout cache performed zero rebuilds "
               f"({r0['warm_layout_hits']} hits; cold {r0['cold_build_s']:.3f}s "
               f"→ warm {r0['warm_build_s']:.3f}s)")
+
+    if args.gate_rollout:
+        ro_rows = run_rollout()
+        if merge_json is not None:
+            record_dist_rows(ro_rows, merge_json)
+        ok = ro_rows and all(
+            r["steady_state_d2h_bytes"] == 0 and r["recompiles"] == 0
+            and r["chunk_calls"] <= 2 * r["rebuild_count"] + 2
+            for r in ro_rows)
+        if not ok:
+            print(f"GATE FAILED: rollout steady state touched the host or "
+                  f"retraced: {ro_rows}")
+            return 1
+        print(f"GATE OK: device-resident rollout at "
+              f"n={[r['n'] for r in ro_rows]} — steady_d2h=0, recompiles=0, "
+              f"chunks≤2·rebuilds+2 "
+              f"({[round(r['steps_per_s'], 1) for r in ro_rows]} steps/s)")
 
     if args.dist is not None:
         dist_rows = run_dist(d=args.dist)

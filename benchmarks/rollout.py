@@ -7,18 +7,20 @@ rollout destabilises (particles escape the container) while FastEGNN tracks
 the ground truth — i.e. FastEGNN's error *grows slower* with rollout depth.
 
 Emits per-step MSE rows:  rollout/<model>_step<k>,_,mse=...
+
+The recursion itself runs on the device-resident rollout engine behind
+``Pipeline.rollout`` (DESIGN.md §10) — this module only assembles the
+ground-truth frames and formats the rows.
 """
 from __future__ import annotations
 
 import argparse
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
 from repro.data.fluid import FluidSample, simulate_fluid
-from repro.data.loader import sample_to_arrays, make_batch
 from repro.pipeline import build_pipeline
 from repro.training.trainer import TrainConfig
 
@@ -34,23 +36,38 @@ def _trajectory_pairs(trajs, dt_frames: int) -> list[FluidSample]:
     return out
 
 
-def _rollout_mse(apply_full, cfg, params, xs, vs, dt_frames: int, n_roll: int,
-                 r: float, drop_rate: float, dt: float) -> list[float]:
-    """Recursive rollout from frame 0; returns MSE vs ground truth per step."""
-    fn = jax.jit(jax.vmap(lambda p, g: apply_full(p, cfg, g)[0],
-                          in_axes=(None, 0)))
-    x, v = xs[0].copy(), vs[0].copy()
-    h = np.ones((x.shape[0], 1), np.float32)
-    errs = []
-    for k in range(1, n_roll + 1):
-        arr = sample_to_arrays(x, v, h, x, r=r, drop_rate=drop_rate)
-        batch = make_batch([arr])
-        x_pred = np.asarray(fn(params, batch.graph)[0])
-        gt = xs[min(k * dt_frames, xs.shape[0] - 1)]
-        errs.append(float(np.mean(np.sum((x_pred - gt) ** 2, -1)) / 3.0))
-        v = (x_pred - x) / (dt_frames * dt)  # finite-difference velocity
-        x = x_pred
-    return errs
+def rollout_targets(xs: np.ndarray, dt_frames: int, n_roll: int) -> np.ndarray:
+    """Ground-truth frame for each rollout step: ``xs[k·dt_frames]``.
+
+    A trajectory too short for ``n_roll`` steps raises — the old code
+    clamped to the last frame, silently comparing successive predictions
+    against one frozen state and understating late-step MSE.  Size
+    ``n_roll`` (or the simulated horizon) at the call site instead.
+    """
+    if n_roll * dt_frames >= xs.shape[0]:
+        raise ValueError(
+            f"trajectory has {xs.shape[0]} frames but step {n_roll} needs "
+            f"frame {n_roll * dt_frames}: simulate at least "
+            f"{n_roll * dt_frames + 1} frames (refusing to clamp ground "
+            f"truth to the last frame)")
+    return np.stack([xs[k * dt_frames] for k in range(1, n_roll + 1)])
+
+
+def _rollout_mse(pipe, params, xs, vs, dt_frames: int, n_roll: int,
+                 r: float, drop_rate: float, dt: float,
+                 skin: float = 0.0) -> list[float]:
+    """Recursive rollout from frame 0; returns MSE vs ground truth per step.
+
+    Thin caller of ``Pipeline.rollout``: the graph rebuilds, per-step
+    drop-longest masking and finite-difference velocity updates all live
+    in the engine; ``skin=0`` is the rebuild-every-step schedule the
+    historical host loop used, so the MSE rows are directly comparable.
+    """
+    h = np.ones((xs.shape[1], 1), np.float32)
+    res = pipe.rollout(params, (xs[0], vs[0], h), n_roll, r=r, skin=skin,
+                       dt=dt_frames * dt, drop_rate=drop_rate,
+                       targets=rollout_targets(xs, dt_frames, n_roll))
+    return [float(e) for e in res.per_step_mse]
 
 
 def run(quick: bool = True):
@@ -78,7 +95,7 @@ def run(quick: bool = True):
         tr = pipe.make_batches(pairs[:n_tr], 4, r=r, drop_rate=drop)
         va = pipe.make_batches(pairs[n_tr:], 4, r=r, drop_rate=drop)
         res = pipe.fit(tr, va)
-        errs = _rollout_mse(pipe.apply_full, pipe.cfg, res.params, ho_xs, ho_vs,
+        errs = _rollout_mse(pipe, res.params, ho_xs, ho_vs,
                             dt_frames, n_roll, r, drop, dt)
         for k, e in enumerate(errs, 1):
             emit(f"rollout/{model}_step{k}", 0.0, f"mse={e:.6f}")

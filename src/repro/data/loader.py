@@ -72,10 +72,13 @@ def sample_to_arrays(
     edge_cap: int | None = None,
 ):
     snd, rcv = radius_graph(x0, r)
-    snd, rcv = drop_longest_edges(x0, snd, rcv, drop_rate)
     # CSR layout: receiver-sorted real edges, padding tail last — the edge
-    # layout contract of the fused Pallas edge kernel (DESIGN.md §3.1)
+    # layout contract of the fused Pallas edge kernel (DESIGN.md §3.1).
+    # Canonical sort comes BEFORE the drop so the drop's stable tie-break
+    # among equal-length directed twins is (receiver, sender) — the same
+    # order the rollout engine's on-device rank selection uses (§10).
     snd, rcv = sort_edges_by_receiver(snd, rcv)
+    snd, rcv = drop_longest_edges(x0, snd, rcv, drop_rate)
     node_cap = node_cap or x0.shape[0]
     edge_cap = edge_cap if edge_cap is not None else max(1, snd.size)
     xp, nm = pad_nodes(x0, node_cap)
@@ -85,6 +88,42 @@ def sample_to_arrays(
     sp, rp, em = pad_edges(snd, rcv, edge_cap, x0)
     return dict(x=xp, v=vp, h=hp, senders=sp, receivers=rp, node_mask=nm,
                 edge_mask=em, x_target=tp)
+
+
+def single_sample_batch(
+    x: np.ndarray,
+    v: np.ndarray,
+    h: np.ndarray,
+    *,
+    r: float = np.inf,
+    drop_rate: float = 0.0,
+    x_target: np.ndarray | None = None,
+    node_cap: int | None = None,
+    edge_cap: int | None = None,
+    with_layout: bool = False,
+    block_e: int | None = None,
+    cache=None,
+) -> GraphBatch:
+    """One scene → a B=1 :class:`GraphBatch` — the single-scene entry point.
+
+    The one place a single-scene batch is assembled (rollout warmup, the
+    quickstart example, serving): builds the radius graph + drop + CSR sort
+    via :func:`sample_to_arrays`, optionally attaches the host banded
+    layout, and stacks the one-sample batch.  ``x_target`` defaults to
+    ``x`` (inference — the target is unused by ``predict``).
+
+    Pass explicit ``node_cap`` / ``edge_cap`` to make shapes
+    *capacity-stable across calls*: every call with the same capacities
+    yields identically-shaped arrays (and one shared band capacity when
+    ``with_layout``), so one jitted program serves every scene instead of
+    recompiling per edge count.
+    """
+    arr = sample_to_arrays(x, v, h, x if x_target is None else x_target,
+                           r=r, drop_rate=drop_rate, node_cap=node_cap,
+                           edge_cap=edge_cap)
+    if with_layout:
+        arr = attach_layout(arr, block_e=block_e, cache=cache)
+    return make_batch([arr])
 
 
 def repad_arrays(a: dict, node_cap: int, edge_cap: int) -> dict:

@@ -243,8 +243,10 @@ def partition_sample(
         idx = np.nonzero(assign == p)[0]
         xs, vs, hs, ts = x[idx], v[idx], h[idx], x_target[idx]
         snd, rcv = radius_graph(xs, r)
+        # CSR layout first, then drop: see sample_to_arrays — the stable
+        # tie-break must match the rollout engine's (d², rcv, snd) rank key.
+        snd, rcv = sort_edges_by_receiver(snd, rcv)
         snd, rcv = drop_longest_edges(xs, snd, rcv, drop_rate)
-        snd, rcv = sort_edges_by_receiver(snd, rcv)  # CSR layout
         shards.append((xs, vs, hs, ts, snd, rcv))
     if e_cap is None:
         e_cap = max(1, max(s[4].size for s in shards))

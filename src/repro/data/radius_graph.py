@@ -1,10 +1,16 @@
 """Host-side radius-graph construction, edge dropping, CSR layout, padding.
 
-Graph building is a data-pipeline step (DESIGN.md §6.3): cell-list radius
+Graph building is host-side numpy (DESIGN.md §6.3): cell-list radius
 search in O(N), distance-sorted edge dropping (the paper drops the top-p
 *longest* edges, Sec. VII-B), a receiver-sort (CSR) layout pass that feeds
 the fused Pallas edge kernel (DESIGN.md §3.1), and fixed-capacity padding
-so the jitted model sees static shapes.
+so the jitted model sees static shapes.  It serves two consumers: the
+training data pipeline (every sample, ahead of time, in stream workers —
+DESIGN.md §8) and the rollout engine's Verlet rebuild path (once per skin
+violation at inference, asynchronously — DESIGN.md §10).  The *skin
+criterion* that decides when a rebuild is due is the one pure-jax function
+here (:func:`displacement_exceeds_skin`), so the rollout inner loop can
+evaluate it on device without a host round-trip.
 """
 from __future__ import annotations
 
@@ -70,33 +76,46 @@ def radius_graph(x: np.ndarray, r: float, max_num_neighbors: int | None = None) 
 
 
 def drop_longest_edges(x: np.ndarray, snd: np.ndarray, rcv: np.ndarray, p: float) -> tuple[np.ndarray, np.ndarray]:
-    """Sec. VII-B edge dropping: sort by length, drop the top-p fraction."""
+    """Sec. VII-B edge dropping: sort by length, drop the top-p fraction.
+
+    The kept edges come back in their *original* relative order (selection
+    by length, not reordering).  Callers feed this *canonically sorted*
+    edges (``sort_edges_by_receiver`` first), so the stable argsort's
+    tie-break among equal-length directed twins is (receiver, sender) —
+    exactly the (d², receiver, sender) lexicographic rank the rollout
+    engine's on-device drop mask uses, which is what makes device-side
+    selection bitwise-equal to this host path (DESIGN.md §10).
+    """
     if p <= 0.0 or snd.size == 0:
         return snd, rcv
     if p >= 1.0:
         return snd[:0], rcv[:0]
     d2 = np.sum((x[snd] - x[rcv]) ** 2, axis=-1)
     n_keep = int(round((1.0 - p) * snd.size))
-    keep = np.argsort(d2, kind="stable")[:n_keep]
+    keep = np.sort(np.argsort(d2, kind="stable")[:n_keep])
     return snd[keep], rcv[keep]
 
 
 def sort_edges_by_receiver(
     snd: np.ndarray, rcv: np.ndarray
 ) -> tuple[np.ndarray, np.ndarray]:
-    """CSR layout pass: stable-sort edges by receiver (DESIGN.md §3.1).
+    """CSR layout pass: sort edges by (receiver, sender) (DESIGN.md §3.1).
 
     Receiver-sorted edges make the segment reduction's scatter targets
     monotone — the layout contract of the fused Pallas edge kernel (each
     edge block then writes a narrow band of receiver rows) and a better
-    access pattern for XLA's segment_sum.  Within-receiver order is
-    irrelevant downstream (an over-capacity :func:`pad_edges` truncation
-    selects the globally shortest edges itself), so a plain stable sort
-    suffices.
+    access pattern for XLA's segment_sum.  The within-receiver sender
+    tiebreak makes the order *canonical* — independent of the cell-list
+    traversal, hence of the build radius: a Verlet list built at
+    ``r + skin`` holds its radius-``r`` subset in exactly the order a
+    fresh radius-``r`` build would, which is what makes the rollout
+    engine's trajectories bitwise independent of ``skin`` (masked extras
+    contribute exact zeros without perturbing the fp summation order —
+    DESIGN.md §10).
     """
     if snd.size == 0:
         return snd, rcv
-    order = np.argsort(rcv, kind="stable")
+    order = np.lexsort((snd, rcv))
     return snd[order], rcv[order]
 
 
@@ -242,6 +261,37 @@ def pad_edges(
     out_r[:e] = rcv
     mask[:e] = 1.0
     return out_s, out_r, mask
+
+
+# --------------------------------------------------------------- Verlet skin
+# The rollout engine (DESIGN.md §10) builds its radius graph at r + skin and
+# reuses it across steps: a list built at reference positions x_ref contains
+# every pair within r of each other as long as no node has moved more than
+# skin/2 from x_ref (two nodes approaching each other head-on close the gap
+# at twice the per-node displacement — hence the factor 2).  The criterion
+# is pure jax so the jit-resident inner loop checks it per step on device.
+
+
+def max_displacement2(x, x_ref, node_mask=None):
+    """Max squared displacement ``max_i ‖x_i − x_ref_i‖²`` (device scalar).
+
+    ``node_mask`` excludes padded rows (their coordinates are clamped
+    artifacts, not simulation state).
+    """
+    import jax.numpy as jnp
+
+    d2 = jnp.sum((x - x_ref) ** 2, axis=-1)
+    if node_mask is not None:
+        d2 = d2 * node_mask
+    return jnp.max(d2)
+
+
+def displacement_exceeds_skin(x, x_ref, skin, node_mask=None):
+    """Pure-jax Verlet rebuild criterion: True once any (real) node has
+    moved more than ``skin / 2`` from the positions the neighbor list was
+    built at — beyond that the ``r + skin`` list may miss a pair now
+    within ``r``, so the edge list must be rebuilt before the next step."""
+    return max_displacement2(x, x_ref, node_mask) > (0.5 * skin) ** 2
 
 
 def pad_nodes(arr: np.ndarray, capacity: int, fill: float = 0.0) -> tuple[np.ndarray, np.ndarray]:

@@ -48,6 +48,27 @@ import numpy as np
 DEFAULT_PREFETCH = 2  # bounded-queue depth (host batches ahead of consume)
 DEFAULT_WORKERS = 4  # per-sample / per-batch build threads
 
+_SHARED_POOL: ThreadPoolExecutor | None = None
+_SHARED_POOL_LOCK = threading.Lock()
+
+
+def shared_worker_pool(max_workers: int = DEFAULT_WORKERS) -> ThreadPoolExecutor:
+    """The process-wide stream worker pool (lazily created, daemonized).
+
+    `BatchStream` epochs spin transient executors (their lifetime is one
+    epoch); long-lived consumers — the rollout engine's asynchronous
+    Verlet rebuilds (DESIGN.md §10) — share this pool instead, so
+    concurrent rollouts don't each spawn threads and host rebuild work is
+    capped at the same worker budget as the data plane.
+    """
+    global _SHARED_POOL
+    with _SHARED_POOL_LOCK:
+        if _SHARED_POOL is None or getattr(_SHARED_POOL, "_shutdown", False):
+            _SHARED_POOL = ThreadPoolExecutor(
+                max_workers=max_workers, thread_name_prefix="repro-stream")
+        return _SHARED_POOL
+
+
 _END = object()  # producer → consumer: epoch exhausted
 
 

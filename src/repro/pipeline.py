@@ -59,7 +59,24 @@ class Pipeline:
         protocol), returns :class:`~repro.training.trainer.FitResult` and
         updates ``self.params`` to the best found;
       * :meth:`predict` — batch-level jitted forward → predicted coords;
+      * :meth:`rollout` — recursive prediction via the device-resident
+        :class:`~repro.rollout.engine.RolloutEngine` (DESIGN.md §10);
       * :meth:`dispatch_report` — trace-time edge-dispatch telemetry.
+
+    The **PredictFn** is the pipeline's one forward surface, built once in
+    ``_build_steps`` alongside the train/eval steps and exposed as
+    :attr:`predict_fn`:
+
+      * single-device: ``predict_fn(params, graph(B,·), layout|None)`` →
+        ``(B, N, 3)`` — one ``jit(vmap)`` program that handles both
+        layout-carrying and legacy (layout-free) batches (a ``None``
+        layout is an empty pytree, so both shapes share the call site);
+      * mesh: ``predict_fn(params, ShardedBatch)`` → ``(D, B, n_cap, 3)``
+        — the jitted ``shard_map`` forward.
+
+    :meth:`predict` is a thin batch-unpacking wrapper over it, and
+    :meth:`rollout` *composes* it — the rollout engine re-jits nothing of
+    the model, it wraps this same program in its while_loop chunk.
     """
 
     def __init__(self, name: str, cfg: Any, params: Any, apply_full: Callable,
@@ -73,7 +90,7 @@ class Pipeline:
         self.opt = Adam(lr=train_cfg.lr, weight_decay=train_cfg.weight_decay,
                         grad_clip=train_cfg.grad_clip)
         self._steps = None
-        self._predict = None
+        self._rollout_engines: dict = {}
 
     # ------------------------------------------------------------- batches
     def make_batches(self, samples, batch_size: int, *, r: float = np.inf,
@@ -139,9 +156,18 @@ class Pipeline:
                     key = jax.random.PRNGKey(tc.seed)
                 return step(params, opt_state, batch, key)
 
-            self._steps = (train_step, ev)
+            def _predict_one(params, g, lay):
+                if lay is None:
+                    return self.apply_full(params, self.cfg, g)[0]
+                return self.apply_full(params, self.cfg, g,
+                                       edge_layout=lay)[0]
+
+            predict_fn = jax.jit(jax.vmap(_predict_one,
+                                          in_axes=(None, 0, 0)))
+            self._steps = (train_step, ev, predict_fn)
         else:
-            from repro.distributed.dist_egnn import build_dist_train_step
+            from repro.distributed.dist_egnn import (build_dist_apply,
+                                                     build_dist_train_step)
 
             step, loss_fn = build_dist_train_step(
                 self.cfg, self.mesh, self.opt, lam_mmd=tc.lam_mmd,
@@ -151,7 +177,9 @@ class Pipeline:
                 params, opt_state, loss = step(params, opt_state, batch)
                 return params, opt_state, {"loss": loss}
 
-            self._steps = (train_step, loss_fn)
+            dist_apply = build_dist_apply(self.cfg, self.mesh)
+            self._steps = (train_step, loss_fn,
+                           lambda p, sb: dist_apply(p, sb)[0])
         return self._steps
 
     @property
@@ -168,28 +196,84 @@ class Pipeline:
         return self._build_steps()[1]
 
     # ------------------------------------------------------------- forward
+    @property
+    def predict_fn(self) -> Callable:
+        """The pipeline's one jitted forward program (the **PredictFn** —
+        see the class docstring for both paths' signatures).  Built once
+        in ``_build_steps``; ``predict`` and ``rollout`` both route
+        through it."""
+        return self._build_steps()[2]
+
     def predict(self, params, batch) -> Array:
         """Batch-level jitted forward → predicted coordinates
-        ((B, N, 3) single-device / (D, B, n_cap, 3) distributed)."""
-        if self._predict is None:
-            if self.mesh is None:
-
-                def one(params, g, lay):
-                    if lay is None:
-                        return self.apply_full(params, self.cfg, g)[0]
-                    return self.apply_full(params, self.cfg, g,
-                                           edge_layout=lay)[0]
-
-                self._predict = jax.jit(jax.vmap(one, in_axes=(None, 0, 0)))
-            else:
-                from repro.distributed.dist_egnn import build_dist_apply
-
-                dist_apply = build_dist_apply(self.cfg, self.mesh)
-                self._predict = lambda p, sb: dist_apply(p, sb)[0]
+        ((B, N, 3) single-device / (D, B, n_cap, 3) distributed).  Thin
+        batch-unpacking wrapper over :attr:`predict_fn`."""
         if self.mesh is None:
-            return self._predict(params, batch.graph,
-                                 getattr(batch, "layout", None))
-        return self._predict(params, batch)
+            return self.predict_fn(params, batch.graph,
+                                   getattr(batch, "layout", None))
+        return self.predict_fn(params, batch)
+
+    def rollout(self, params, state0, n_steps: int, *, r: float,
+                skin: float = 0.0, dt: float, drop_rate: float = 0.0,
+                targets=None, node_cap: Optional[int] = None,
+                edge_cap: Optional[int] = None,
+                async_rebuild: Optional[bool] = None,
+                partition: str = "random", seed: int = 0,
+                traj_capacity: Optional[int] = None,
+                wrap_box: Optional[float] = None):
+        """Recursive prediction: feed the model its own output for
+        ``n_steps`` steps, velocities re-estimated by finite differences
+        at timestep ``dt`` — the sibling of :meth:`predict` for
+        simulation (DESIGN.md §10).
+
+        ``state0`` is ``(x0, v0, h)`` (raw numpy, one scene).  ``r`` /
+        ``drop_rate`` are the model's graph semantics — identical to
+        training; ``skin`` is an execution knob: the radius graph is
+        built once at ``r + skin`` and reused on device until some node
+        moves more than ``skin/2``, with rebuilds running asynchronously
+        on the stream worker pool (``async_rebuild``, default on when
+        ``skin > 0``) while the still-valid list keeps stepping.  The
+        trajectory is independent of ``skin`` (up to float ties at the
+        cutoffs); ``skin=0`` rebuilds every step.  ``targets`` (optional
+        ground-truth frames, one per step — short arrays raise) adds
+        ``per_step_mse``.  On a mesh pipeline the rollout routes through
+        the frozen-``partition`` per-shard layouts.  Engines are cached
+        per parameter set, so repeated calls reuse the jitted chunk;
+        ``traj_capacity`` pre-sizes the trajectory buffer so a short
+        warmup run compiles the exact program a longer run dispatches.
+        ``wrap_box`` applies periodic boundary conditions (positions
+        wrapped into ``[0, wrap_box)^3`` each step, before the velocity
+        finite difference) — this bounds the recursion for arbitrarily
+        long horizons; without it, a diverging model raises
+        ``FloatingPointError`` once coordinates go non-finite.
+
+        Returns a :class:`~repro.rollout.engine.RolloutResult`.
+        """
+        from repro.rollout.engine import DistRolloutEngine, RolloutEngine
+
+        x0, v0, h = state0
+        key = (self.mesh is None, float(r), float(skin), float(dt),
+               float(drop_rate), node_cap, edge_cap, async_rebuild,
+               partition, seed, wrap_box)
+        eng = self._rollout_engines.get(key)
+        if eng is None:
+            if self.mesh is None:
+                eng = RolloutEngine(
+                    self.predict_fn, r=r, skin=skin, dt=dt,
+                    drop_rate=drop_rate, node_cap=node_cap,
+                    edge_cap=edge_cap,
+                    with_layout=bool(getattr(self.cfg, "use_kernel",
+                                             False)),
+                    async_rebuild=async_rebuild, wrap_box=wrap_box)
+            else:
+                eng = DistRolloutEngine(
+                    self.predict_fn, d=self.mesh.devices.size, r=r,
+                    skin=skin, dt=dt, drop_rate=drop_rate,
+                    strategy=partition, seed=seed, n_cap=node_cap,
+                    e_cap=edge_cap, wrap_box=wrap_box)
+            self._rollout_engines[key] = eng
+        return eng.run(params, x0, v0, h, n_steps, targets=targets,
+                       traj_capacity=traj_capacity)
 
     # ----------------------------------------------------------------- fit
     def fit(self, train_batches, val_batches, verbose: bool = False) -> FitResult:
@@ -205,7 +289,7 @@ class Pipeline:
         """
         from repro.training.trainer import run_fit
 
-        step, eval_step = self._build_steps()
+        step, eval_step, _ = self._build_steps()
         res = run_fit(step, eval_step, self.params,
                       self.opt.init(self.params), self.train_cfg,
                       train_batches, val_batches, verbose=verbose)

@@ -1,0 +1,5 @@
+"""Device-resident recursive rollout (DESIGN.md §10)."""
+from repro.rollout.engine import (DistRolloutEngine, RolloutEngine,
+                                  RolloutResult)
+
+__all__ = ["RolloutEngine", "DistRolloutEngine", "RolloutResult"]

@@ -1,0 +1,707 @@
+"""Device-resident recursive rollout over Verlet neighbor lists (DESIGN.md §10).
+
+The paper's headline rollout claims (Figs. 3 & 7) need recursive
+prediction: feed the model its own output, re-estimate velocities by
+finite differences, repeat.  The naive loop drops to Python every step —
+rebuild the radius graph, rebuild the banded layout, round-trip the
+coordinates through numpy — so at Fluid113K scale the host rebuild dwarfs
+the model step.  This module keeps the recursion *on device*:
+
+* the neighbor list is built once at ``r + skin`` (a **Verlet list**) and
+  reused: built at reference positions ``x_ref`` it contains every pair
+  within ``r`` of each other until some node has moved more than
+  ``skin/2`` from ``x_ref`` (two nodes approaching head-on close their gap
+  at twice the per-node displacement — the factor 2 in
+  :func:`~repro.data.radius_graph.displacement_exceeds_skin`);
+* each step applies the *exact* radius-``r`` + drop-longest edge semantics
+  as an **on-device mask** over the Verlet candidate list (so the model
+  sees the same edge set it would on a fresh host build — the effective
+  graph is independent of the rebuild schedule);
+* a single jitted **chunk** function runs a ``lax.while_loop`` —
+  mask → model → ``v = (x' − x) / dt`` → trajectory write — until the
+  skin criterion (or the step budget) trips; the only per-chunk host
+  traffic is one scalar fetch of the step count;
+* when the criterion trips, the list + banded layout are rebuilt on the
+  host.  With ``async_rebuild`` the rebuild is *submitted early* (at
+  ``rebuild_margin`` of the skin budget) to the shared
+  :func:`~repro.data.stream.shared_worker_pool` and the still-valid list
+  keeps stepping while the build runs — the stale-list phase is bounded by
+  **both** the old reference's skin budget and the pending build's
+  reference (triangle inequality: each bound alone would let a pair close
+  more than the skin), so the swapped-in list is valid by construction;
+* all rebuilds reuse one (node, edge, band) capacity and one
+  ``(window, swindow)`` geometry, so the chunk program **never retraces**:
+  steady-state stepping is zero host transfers and zero recompiles, and
+  the engine counts both (``RolloutResult.steady_state_d2h_bytes``,
+  ``.recompiles``) so ``kernel_bench --gate-rollout`` can assert it.
+
+:class:`RolloutEngine` is model-agnostic: it composes any ``PredictFn``
+``(params, graph(B,·), layout|None) -> (B, N, 3)`` — in practice the one
+``Pipeline._build_steps`` builds — and is surfaced as ``Pipeline.rollout``.
+:class:`DistRolloutEngine` is the mesh sibling: host-stepped (one scalar
+fetch per step), but with the partition assignment frozen and every
+rebuild reusing the per-shard capacities and banded layouts, so the
+``shard_map`` program never retraces either.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import GeometricGraph
+from repro.data.radius_graph import (banded_csr_layout, pad_edges, pad_nodes,
+                                     radius_graph, sort_edges_by_receiver)
+
+Array = jax.Array
+
+#: extra edge capacity over the first build, absorbing density fluctuations
+#: across rebuilds without a reshape (a breach truncates longest-first with
+#: a warning — ``pad_edges``)
+DEFAULT_EDGE_HEADROOM = 1.25
+
+
+@dataclass
+class RolloutResult:
+    """What a rollout returns — trajectory plus the engine's accounting.
+
+    ``trajectory`` is the predicted positions per step, real nodes only.
+    ``per_step_mse`` (when targets were given) matches the historical
+    benchmark metric: mean squared *coordinate* error, i.e. mean over
+    nodes of ‖x̂ − x‖² / 3.  The remaining fields are the evidence for the
+    engine's contract: ``steady_state_d2h_bytes`` counts device→host bytes
+    moved *outside* rebuild/result boundaries (structurally zero — the
+    while_loop body contains no host transfer), ``recompiles`` counts
+    chunk retraces after the first (zero when every rebuild reuses the
+    capacities), and ``chunk_calls ≤ 2·rebuild_count + 2`` bounds the jit
+    dispatch overhead.  ``rebuild_waits`` counts async rebuilds that were
+    not finished when the stale-list budget ran out (the host blocked).
+    """
+
+    trajectory: np.ndarray  # (n_steps, n, 3)
+    per_step_mse: Optional[np.ndarray]  # (n_steps,) | None
+    rebuild_count: int
+    steps_per_rebuild: float  # n_steps / (rebuild_count + 1)
+    n_steps: int
+    rebuild_steps: list = field(default_factory=list)  # step index of each swap
+    trigger_steps: list = field(default_factory=list)  # step index of each submit
+    rebuild_waits: int = 0
+    chunk_calls: int = 0
+    recompiles: int = 0
+    d2h_bytes: int = 0
+    h2d_bytes: int = 0
+    steady_state_d2h_bytes: int = 0
+
+
+def _nbytes(a) -> int:
+    return int(np.asarray(a).size) * np.asarray(a).dtype.itemsize
+
+
+class _Telemetry:
+    """Shared transfer/retrace accounting for both engines.
+
+    Byte counters track array payloads the engine itself moves (coordinate
+    fetches at rebuilds, rebuilt edge/layout uploads, the per-chunk step
+    count, the final trajectory fetch) — jit scalar operands are noise and
+    not counted.  ``_fetch(·, steady=True)`` marks a transfer as happening
+    *inside* the steady state; the engines only ever fetch at boundaries,
+    so ``steady_d2h`` is structurally zero — the counter exists so any
+    future host round-trip added to the hot path fails the bench gate
+    instead of silently landing.
+    """
+
+    def __init__(self):
+        self.d2h = 0
+        self.h2d = 0
+        self.steady_d2h = 0
+        self.d2h_fetches = 0
+        self.traces = 0  # incremented at *trace time* in the jitted step
+
+    def fetch(self, arr, steady: bool = False) -> np.ndarray:
+        out = np.asarray(arr)
+        b = out.size * out.dtype.itemsize
+        self.d2h += b
+        self.d2h_fetches += 1
+        if steady:
+            self.steady_d2h += b
+        return out
+
+    def uploaded(self, *arrays) -> None:
+        self.h2d += sum(_nbytes(a) for a in arrays)
+
+
+def _step_edge_masks(x, snd, rcv, em, r2: float, p: float):
+    """Per-step on-device edge selection over the Verlet candidate list.
+
+    Recomputes squared lengths at the *current* positions and applies the
+    exact host-build semantics: radius-``r`` filter, then Sec. VII-B
+    drop-longest — ``n_keep = round((1−p)·n_valid)`` edges kept.  The
+    selection is by *rank* under the lexicographic key ``(d², receiver,
+    sender)``, not by a value threshold: every undirected pair appears as
+    two directed edges with bitwise-identical d², so a value threshold
+    would keep both twins whenever the cut splits a pair, where the host
+    path (a stable argsort by d² over canonically (receiver, sender)-
+    sorted edges — ``drop_longest_edges``) keeps exactly one.  The lex key
+    reproduces that stable tie-break as a pure function of edge identity,
+    so the same kept *set* falls out no matter the storage order — which
+    is how the banded layout copy of the edges (a permutation of this
+    multiset, masked by a second call to this function) stays consistent
+    with the graph copy.  Masked-out edges contribute exact zeros to the
+    segment sums and kept edges keep their receiver-sorted relative
+    order, so the result is bitwise what a fresh host build at radius
+    ``r`` would produce.
+    """
+    d = x[snd] - x[rcv]
+    d2 = jnp.sum(d * d, axis=-1)
+    valid = (em > 0) & (d2 <= r2)
+    if p <= 0.0:
+        return valid
+    n_valid = jnp.sum(valid)
+    n_keep = jnp.round((1.0 - p) * n_valid).astype(jnp.int32)
+    key = jnp.where(valid, d2, jnp.inf)
+    order = jnp.lexsort((snd, rcv, key))
+    rank = jnp.zeros(order.shape, jnp.int32).at[order].set(
+        jnp.arange(order.shape[0], dtype=jnp.int32))
+    return valid & (rank < n_keep)
+
+
+class RolloutEngine:
+    """Jit-resident recursive rollout for the single-device path.
+
+    ``predict_fn(params, graph(B=1,·), layout|None) -> (1, N, 3)`` is the
+    model surface (compose ``Pipeline.predict_fn``); ``r``/``drop_rate``
+    are the *model's* graph semantics, ``skin`` is purely an execution
+    knob: the trajectory is (up to float ties at the cutoffs) independent
+    of it, and ``skin=0`` degenerates to a synchronous rebuild-every-step
+    oracle — the parity anchor ``tests/test_rollout.py`` pins.
+
+    ``async_rebuild`` (default: on whenever ``skin > 0``) submits rebuilds
+    at ``rebuild_margin`` of the skin budget to the shared stream worker
+    pool and keeps stepping on the still-valid list; see the module
+    docstring for the two-reference validity argument.
+
+    ``wrap_box`` applies periodic boundary conditions: each predicted
+    position is wrapped into ``[0, wrap_box)^3`` *before* the
+    finite-difference velocity is formed, so every quantity the model
+    sees is bounded by the box (``|v| <= wrap_box * sqrt(3) / dt``) and
+    the recursion cannot diverge over any horizon — the regime long
+    benchmark rollouts of untrained models need.  The neighbour search
+    is not minimum-image (pairs across a face are simply not found);
+    nodes crossing a face register a ~box-sized displacement and
+    trigger a rebuild, which is conservative and correct.
+    """
+
+    def __init__(self, predict_fn: Callable, *, r: float, skin: float,
+                 dt: float, drop_rate: float = 0.0,
+                 node_cap: Optional[int] = None,
+                 edge_cap: Optional[int] = None,
+                 with_layout: bool = False, block_e: Optional[int] = None,
+                 async_rebuild: Optional[bool] = None,
+                 rebuild_margin: float = 0.5,
+                 edge_headroom: float = DEFAULT_EDGE_HEADROOM, pool=None,
+                 wrap_box: Optional[float] = None):
+        if skin < 0:
+            raise ValueError(f"skin must be >= 0, got {skin}")
+        if not 0 < rebuild_margin <= 1:
+            raise ValueError(f"rebuild_margin must be in (0, 1], got "
+                             f"{rebuild_margin}")
+        if wrap_box is not None and not wrap_box > 0:
+            raise ValueError(f"wrap_box must be > 0, got {wrap_box}")
+        self.predict_fn = predict_fn
+        self.r = float(r)
+        self.skin = float(skin)
+        self.dt = float(dt)
+        self.drop_rate = float(drop_rate)
+        self.rebuild_margin = float(rebuild_margin)
+        self.edge_headroom = float(edge_headroom)
+        self.wrap_box = None if wrap_box is None else float(wrap_box)
+        self.async_rebuild = (skin > 0 if async_rebuild is None
+                              else bool(async_rebuild))
+        self.with_layout = bool(with_layout)
+        self._node_cap = node_cap
+        self._edge_cap = edge_cap
+        self._block_e = block_e
+        self._pool = pool
+        self._chunk = None
+        self._traj_cap = 0
+        self._tel = _Telemetry()
+        # filled by the first build
+        self._g: Optional[GeometricGraph] = None
+        self._lay = None
+        self._n_real = 0
+        self._window = self._swindow = self._lay_cap = None
+
+    # ------------------------------------------------------------- host side
+    def _host_build(self, x_np: np.ndarray) -> dict:
+        """Rebuild the Verlet edge list (+ banded layout) at positions
+        ``x_np`` — pure numpy, worker-thread safe.  Capacities and band
+        geometry are pinned at the first build, so every product has the
+        same shape and the jitted chunk never retraces."""
+        snd, rcv = radius_graph(x_np, self.r + self.skin)
+        snd, rcv = sort_edges_by_receiver(snd, rcv)
+        sp, rp, em = pad_edges(snd, rcv, self._edge_cap, x_np)
+        out = dict(senders=sp, receivers=rp, edge_mask=em)
+        if self.with_layout:
+            out["layout"] = banded_csr_layout(
+                sp, rp, self._node_cap, edge_mask=em, window=self._window,
+                swindow=self._swindow, block_e=self._block_e,
+                capacity=self._lay_cap)
+        return out
+
+    def _install(self, build: dict) -> None:
+        """Swap a host build in as the chunk's edge operands (B=1)."""
+        from repro.kernels.edge_message import layout_from_host
+
+        self._tel.uploaded(build["senders"], build["receivers"],
+                           build["edge_mask"])
+        self._g = self._g._replace(
+            senders=jnp.asarray(build["senders"])[None],
+            receivers=jnp.asarray(build["receivers"])[None],
+            edge_mask=jnp.asarray(build["edge_mask"])[None])
+        if self.with_layout:
+            bcsr = build["layout"]
+            self._tel.uploaded(bcsr.senders, bcsr.receivers, bcsr.edge_mask,
+                               bcsr.block_rwin, bcsr.block_swin)
+            self._lay = jax.tree.map(lambda a: a[None],
+                                     layout_from_host(bcsr))
+
+    def _first_build(self, x0, v0, h) -> tuple[Array, Array]:
+        """Size the capacities, build the B=1 graph template, install the
+        first edge list.  Returns the device (x, v) state."""
+        from repro.core.message_passing import EDGE_KERNEL_BLOCK_E
+        from repro.kernels.edge_message import layout_capacity, pick_windows
+
+        if self.wrap_box is not None:
+            b = np.float32(self.wrap_box)
+            x0 = x0 - b * np.floor(x0 / b)
+        n = x0.shape[0]
+        self._n_real = n
+        self._node_cap = int(self._node_cap or n)
+        if self._block_e is None:
+            self._block_e = EDGE_KERNEL_BLOCK_E
+        snd, rcv = radius_graph(np.asarray(x0), self.r + self.skin)
+        snd, rcv = sort_edges_by_receiver(snd, rcv)
+        if self._edge_cap is None:
+            self._edge_cap = max(1, int(np.ceil(snd.size
+                                                * self.edge_headroom)))
+        self._window, self._swindow, n_pad = pick_windows(self._node_cap)
+        nw, nsw = n_pad // self._window, n_pad // self._swindow
+        self._lay_cap = layout_capacity(self._edge_cap, nw, nsw,
+                                        self._block_e)
+
+        xp, nm = pad_nodes(np.asarray(x0, np.float32), self._node_cap)
+        vp, _ = pad_nodes(np.asarray(v0, np.float32), self._node_cap)
+        hp, _ = pad_nodes(np.asarray(h, np.float32), self._node_cap)
+        sp, rp, em = pad_edges(snd, rcv, self._edge_cap, np.asarray(x0))
+        self._tel.uploaded(xp, vp, hp, nm)
+        self._g = GeometricGraph(
+            x=jnp.asarray(xp)[None], v=jnp.asarray(vp)[None],
+            h=jnp.asarray(hp)[None],
+            senders=jnp.zeros((1, self._edge_cap), jnp.int32),
+            receivers=jnp.zeros((1, self._edge_cap), jnp.int32),
+            edge_attr=jnp.zeros((1, self._edge_cap, 0), jnp.float32),
+            node_mask=jnp.asarray(nm)[None],
+            edge_mask=jnp.zeros((1, self._edge_cap), jnp.float32))
+        self._install(dict(
+            senders=sp, receivers=rp,
+            edge_mask=em, layout=(banded_csr_layout(
+                sp, rp, self._node_cap, edge_mask=em, window=self._window,
+                swindow=self._swindow, block_e=self._block_e,
+                capacity=self._lay_cap) if self.with_layout else None)))
+        return self._g.x[0], self._g.v[0]
+
+    # ----------------------------------------------------------- device side
+    def _build_chunk(self) -> Callable:
+        """The one jitted program: while_loop until the skin criterion,
+        a second reference's criterion, or the step budget trips.
+
+        Thresholds, references, start offset and budget are *operands*
+        (device scalars/arrays), so phase A (single reference, trigger
+        threshold) and phase B (old + pending references, full skin
+        budget) share one trace.  The crossing is checked **before** each
+        step — the body never applies a possibly-stale list.
+        """
+        r2 = np.float32(self.r) ** 2
+        p = self.drop_rate
+        dt = self.dt
+
+        def chunk(params, g, lay, x, v, ref_a, ref_b, traj,
+                  start, budget, lim_a2, lim_b2):
+            self._tel.traces += 1
+            nm = g.node_mask[0]
+            snd, rcv, em = g.senders[0], g.receivers[0], g.edge_mask[0]
+
+            def disp2(xc, ref):
+                return jnp.max(jnp.sum((xc - ref) ** 2, axis=-1) * nm)
+
+            def cond(c):
+                i, x, _, _ = c
+                return ((i < budget) & (disp2(x, ref_a) <= lim_a2)
+                        & (disp2(x, ref_b) <= lim_b2))
+
+            def body(c):
+                i, x, v, traj = c
+                keep = _step_edge_masks(x, snd, rcv, em, r2, p)
+                gi = g._replace(x=x[None], v=v[None],
+                                edge_mask=keep.astype(jnp.float32)[None])
+                if lay is None:
+                    li = None
+                else:
+                    lk = _step_edge_masks(x, lay.senders[0], lay.receivers[0],
+                                          lay.edge_mask[0], r2, p)
+                    li = type(lay)(lay.senders, lay.receivers,
+                                   lk.astype(jnp.float32)[None],
+                                   lay.block_rwin, lay.block_swin,
+                                   meta=lay.meta)
+                xp = self.predict_fn(params, gi, li)[0]
+                xp = jnp.where(nm[:, None] > 0, xp, 0.0)
+                if self.wrap_box is not None:
+                    b = jnp.float32(self.wrap_box)
+                    xp = xp - b * jnp.floor(xp / b)
+                vn = (xp - x) / dt
+                traj = jax.lax.dynamic_update_slice(
+                    traj, xp[None], (start + i, 0, 0))
+                return i + jnp.int32(1), xp, vn, traj
+
+            i, x, v, traj = jax.lax.while_loop(
+                cond, body, (jnp.int32(0), x, v, traj))
+            return x, v, traj, i
+
+        # donating the trajectory buffer keeps one live copy regardless of
+        # horizon; CPU jit can't donate (warns), so gate on the backend
+        donate = (7,) if jax.default_backend() != "cpu" else ()
+        return jax.jit(chunk, donate_argnums=donate)
+
+    # ------------------------------------------------------------------- run
+    def run(self, params, x0, v0, h, n_steps: int, *,
+            targets: Optional[np.ndarray] = None,
+            traj_capacity: Optional[int] = None) -> RolloutResult:
+        """Roll the model ``n_steps`` forward from ``(x0, v0, h)``.
+
+        ``targets``, when given, must cover every step — ``targets[k]`` is
+        the ground truth for step ``k+1``'s prediction; a short target
+        array *raises* (comparing late predictions against a frozen last
+        frame silently understates the error — size ``n_steps`` at the
+        call site instead).
+
+        The trajectory buffer is the one chunk operand whose shape depends
+        on ``n_steps``, so it is allocated at the *largest* capacity any
+        run of this engine has requested (monotone ``self._traj_cap``) and
+        sliced to ``n_steps`` on fetch: re-running at any shorter length
+        reuses the compiled chunk with zero retraces.  ``traj_capacity``
+        pre-sizes it — a 2-step warmup with ``traj_capacity=40`` compiles
+        the exact program a 40-step timed run dispatches.
+        """
+        from repro.data.stream import shared_worker_pool
+
+        n_steps = int(n_steps)
+        if n_steps <= 0:
+            raise ValueError(f"n_steps must be positive, got {n_steps}")
+        if targets is not None:
+            targets = np.asarray(targets)
+            if targets.shape[0] < n_steps:
+                raise ValueError(
+                    f"rollout targets cover {targets.shape[0]} steps but "
+                    f"n_steps={n_steps}: refusing to clamp ground truth to "
+                    f"the last frame (it silently understates late-step "
+                    f"error) — pass n_steps <= len(targets) or more frames")
+
+        tel = self._tel
+        # engines are cached/reused: report per-run deltas, not lifetime sums
+        base = (tel.d2h, tel.h2d, tel.steady_d2h)
+        x, v = self._first_build(np.asarray(x0), np.asarray(v0),
+                                 np.asarray(h))
+        if self._chunk is None:
+            self._chunk = self._build_chunk()
+        n = self._n_real
+        self._traj_cap = max(self._traj_cap, n_steps, int(traj_capacity or 0))
+        traj = jnp.zeros((self._traj_cap, self._node_cap, 3), jnp.float32)
+
+        inf = np.float32(np.inf)
+        lim2 = np.float32((0.5 * self.skin) ** 2)
+        trig2 = (np.float32((self.rebuild_margin * 0.5 * self.skin) ** 2)
+                 if self.async_rebuild else lim2)
+        pool = None
+        x_ref = x
+        pending = None  # (future, x_trigger) during an async build
+        done = 0
+        chunk_calls = 0
+        waits = 0
+        rebuild_steps: list[int] = []
+        trigger_steps: list[int] = []
+        base_traces = tel.traces
+        while done < n_steps:
+            if pending is None:  # phase A: fresh list, watch the trigger
+                refs, lims = (x_ref, x_ref), (trig2, inf)
+            else:  # phase B: stale list, bounded by old ref AND trigger ref
+                refs, lims = (x_ref, pending[1]), (lim2, lim2)
+            x, v, traj, i = self._chunk(
+                params, self._g, self._lay, x, v, refs[0], refs[1], traj,
+                np.int32(done), np.int32(n_steps - done), lims[0], lims[1])
+            chunk_calls += 1
+            done += int(tel.fetch(i))
+            if done >= n_steps:
+                break
+            if pending is None:
+                trigger_steps.append(done)
+                x_np = tel.fetch(x)[:n]
+                if not np.isfinite(x_np).all():
+                    # the skin criterion can never advance past NaN/Inf
+                    # state (every displacement comparison is False), so
+                    # without this check the loop would rebuild at the
+                    # same positions forever
+                    raise FloatingPointError(
+                        f"rollout diverged: non-finite coordinates after "
+                        f"step {done} — train the model, shorten the "
+                        f"horizon, or bound the dynamics with wrap_box")
+                if self.async_rebuild:
+                    if pool is None:
+                        pool = self._pool or shared_worker_pool()
+                    pending = (pool.submit(self._host_build, x_np), x)
+                else:
+                    self._install(self._host_build(x_np))
+                    x_ref = x
+                    rebuild_steps.append(done)
+            else:
+                fut, x_trig = pending
+                if not fut.done():
+                    waits += 1  # budget ran out before the build landed
+                self._install(fut.result())
+                x_ref = x_trig
+                rebuild_steps.append(done)
+                pending = None
+
+        traj_np = tel.fetch(traj)[:n_steps, :n]
+        mse = None
+        if targets is not None:
+            err = np.sum((traj_np - targets[:n_steps, :n]) ** 2, axis=-1)
+            mse = np.mean(err, axis=-1) / 3.0
+        rebuilds = len(rebuild_steps)
+        return RolloutResult(
+            trajectory=traj_np, per_step_mse=mse, rebuild_count=rebuilds,
+            steps_per_rebuild=n_steps / (rebuilds + 1), n_steps=n_steps,
+            rebuild_steps=rebuild_steps, trigger_steps=trigger_steps,
+            rebuild_waits=waits, chunk_calls=chunk_calls,
+            recompiles=max(0, tel.traces - base_traces
+                           - (1 if base_traces == 0 else 0)),
+            d2h_bytes=tel.d2h - base[0], h2d_bytes=tel.h2d - base[1],
+            steady_state_d2h_bytes=tel.steady_d2h - base[2])
+
+
+class DistRolloutEngine:
+    """Mesh-path rollout: per-shard Verlet lists + banded-layout reuse.
+
+    ``dist_predict(params, ShardedBatch) -> (D, B=1, n_cap, 3)`` is the
+    ``shard_map`` forward (``Pipeline.predict_fn`` on a mesh pipeline).
+    The partition assignment is computed **once** at the initial positions
+    and frozen for the whole rollout — shard membership changing mid-
+    trajectory would reshuffle every carried buffer; with the per-shard
+    node/edge/band capacities also pinned at the first build, rebuilds
+    swap operands under one fixed shard_map program (zero retraces, the
+    same contract as the single-device chunk).  The inner loop is
+    host-*stepped* (the skin criterion is one scalar fetch per step — the
+    trajectory itself stays device-resident); folding it into a
+    while_loop chunk like the single-device engine is future work noted
+    in DESIGN.md §10.
+    """
+
+    def __init__(self, dist_predict: Callable, *, d: int, r: float,
+                 skin: float, dt: float, drop_rate: float = 0.0,
+                 strategy: str = "random", seed: int = 0,
+                 n_cap: Optional[int] = None, e_cap: Optional[int] = None,
+                 edge_headroom: float = DEFAULT_EDGE_HEADROOM,
+                 wrap_box: Optional[float] = None):
+        if skin < 0:
+            raise ValueError(f"skin must be >= 0, got {skin}")
+        if wrap_box is not None and not wrap_box > 0:
+            raise ValueError(f"wrap_box must be > 0, got {wrap_box}")
+        self.dist_predict = dist_predict
+        self.d = int(d)
+        self.r = float(r)
+        self.skin = float(skin)
+        self.dt = float(dt)
+        self.drop_rate = float(drop_rate)
+        self.strategy = strategy
+        self.seed = int(seed)
+        self.edge_headroom = float(edge_headroom)
+        self.wrap_box = None if wrap_box is None else float(wrap_box)
+        self._n_cap = n_cap
+        self._e_cap = e_cap
+        self._tel = _Telemetry()
+        self._step = None
+        self._traj_cap = 0
+        self._idx = None  # per-shard global node indices (frozen)
+
+    def _freeze_assignment(self, x0: np.ndarray) -> None:
+        from repro.data.partition import (metis_like_partition,
+                                          random_partition)
+
+        n = x0.shape[0]
+        rng = np.random.default_rng(self.seed)
+        if self.strategy == "random":
+            assign = random_partition(rng, n, self.d)
+        elif self.strategy == "metis":
+            gs, gr = radius_graph(x0, self.r + self.skin)
+            assign = metis_like_partition(x0, gs, gr, self.d)
+        else:
+            raise ValueError(f"unknown partition strategy "
+                             f"{self.strategy!r}")
+        self._idx = [np.nonzero(assign == p)[0] for p in range(self.d)]
+        if self._n_cap is None:
+            self._n_cap = max(1, max(i.size for i in self._idx))
+
+    def _host_build(self, x: np.ndarray, v: np.ndarray, h: np.ndarray):
+        """Per-shard Verlet lists + layouts at frozen assignment → stacked
+        numpy ShardedBatch fields (B=1)."""
+        from repro.data.partition import shard_layout_fields
+        from repro.distributed.dist_egnn import ShardedBatch
+
+        shards = []
+        for idx in self._idx:
+            xs = x[idx]
+            snd, rcv = radius_graph(xs, self.r + self.skin)
+            snd, rcv = sort_edges_by_receiver(snd, rcv)
+            shards.append((xs, v[idx], h[idx], snd, rcv))
+        if self._e_cap is None:
+            e_max = max(1, max(s[3].size for s in shards))
+            self._e_cap = max(1, int(np.ceil(e_max * self.edge_headroom)))
+        cols = {k: [] for k in ("x", "v", "h", "x_target", "senders",
+                                "receivers", "node_mask", "edge_mask")}
+        for xs, vs, hs, snd, rcv in shards:
+            xp, nm = pad_nodes(np.asarray(xs, np.float32), self._n_cap)
+            vp, _ = pad_nodes(np.asarray(vs, np.float32), self._n_cap)
+            hp, _ = pad_nodes(np.asarray(hs, np.float32), self._n_cap)
+            sp, rp, em = pad_edges(snd, rcv, self._e_cap, xs)
+            cols["x"].append(xp)
+            cols["v"].append(vp)
+            cols["h"].append(hp)
+            cols["x_target"].append(xp)
+            cols["senders"].append(sp)
+            cols["receivers"].append(rp)
+            cols["node_mask"].append(nm)
+            cols["edge_mask"].append(em)
+        base = {k: np.stack(vv) for k, vv in cols.items()}
+        lay = shard_layout_fields(base["senders"], base["receivers"],
+                                  base["edge_mask"], self._n_cap)
+        lay.pop("lay_window_offsets", None)
+        fields = {**base, **lay}
+        return {f: np.stack([fields[f]], axis=1)
+                for f in ShardedBatch._fields}
+
+    def _install(self, host: dict):
+        from repro.distributed.dist_egnn import sharded_batch_to_device
+
+        self._tel.uploaded(*host.values())
+        return sharded_batch_to_device(host)
+
+    def _build_step(self) -> Callable:
+        r2 = np.float32(self.r) ** 2
+        p = self.drop_rate
+        dt = self.dt
+
+        def step(params, sb, x_ref, traj, k):
+            self._tel.traces += 1
+
+            def one(x, snd, rcv, em, ls, lr, lem):
+                keep = _step_edge_masks(x, snd, rcv, em, r2, p)
+                lk = _step_edge_masks(x, ls, lr, lem, r2, p)
+                return keep.astype(jnp.float32), lk.astype(jnp.float32)
+
+            km, lkm = jax.vmap(jax.vmap(one))(
+                sb.x, sb.senders, sb.receivers, sb.edge_mask,
+                sb.lay_senders, sb.lay_receivers, sb.lay_edge_mask)
+            xp = self.dist_predict(
+                params, sb._replace(edge_mask=km, lay_edge_mask=lkm))
+            xp = jnp.where(sb.node_mask[..., None] > 0, xp, 0.0)
+            if self.wrap_box is not None:
+                b = jnp.float32(self.wrap_box)
+                xp = xp - b * jnp.floor(xp / b)
+            vn = (xp - sb.x) / dt
+            d2 = jnp.max(jnp.sum((xp - x_ref) ** 2, axis=-1)
+                         * sb.node_mask)
+            traj = jax.lax.dynamic_update_slice(
+                traj, xp[:, 0][None], (k, 0, 0, 0))
+            return sb._replace(x=xp, v=vn), d2, traj
+
+        return jax.jit(step)
+
+    def run(self, params, x0, v0, h, n_steps: int, *,
+            targets: Optional[np.ndarray] = None,
+            traj_capacity: Optional[int] = None) -> RolloutResult:
+        n_steps = int(n_steps)
+        if n_steps <= 0:
+            raise ValueError(f"n_steps must be positive, got {n_steps}")
+        x0 = np.asarray(x0)
+        if self.wrap_box is not None:
+            b = np.float32(self.wrap_box)
+            x0 = x0 - b * np.floor(x0 / b)
+        n = x0.shape[0]
+        if targets is not None:
+            targets = np.asarray(targets)
+            if targets.shape[0] < n_steps:
+                raise ValueError(
+                    f"rollout targets cover {targets.shape[0]} steps but "
+                    f"n_steps={n_steps}: size n_steps at the call site "
+                    f"instead of clamping ground truth")
+        self._freeze_assignment(x0)
+        tel = self._tel
+        base = (tel.d2h, tel.h2d, tel.steady_d2h)
+        sb = self._install(self._host_build(x0, np.asarray(v0),
+                                            np.asarray(h)))
+        if self._step is None:
+            self._step = self._build_step()
+        # monotone buffer capacity, same contract as RolloutEngine.run:
+        # shorter re-runs reuse the compiled step with zero retraces
+        self._traj_cap = max(self._traj_cap, n_steps, int(traj_capacity or 0))
+        traj = jnp.zeros((self._traj_cap, self.d, self._n_cap, 3),
+                         jnp.float32)
+        lim2 = (0.5 * self.skin) ** 2
+        x_ref = sb.x
+        rebuild_steps: list[int] = []
+        base_traces = tel.traces
+        for k in range(n_steps):
+            sb, d2, traj = self._step(params, sb, x_ref, traj, np.int32(k))
+            if k + 1 < n_steps and float(tel.fetch(d2)) > lim2:
+                # list may miss a radius-r pair from here on: rebuild
+                # before the next step at the frozen assignment/capacities
+                xg, vg = self._gather(tel.fetch(sb.x), tel.fetch(sb.v), n)
+                if not np.isfinite(xg).all():
+                    raise FloatingPointError(
+                        f"rollout diverged: non-finite coordinates after "
+                        f"step {k + 1} — train the model, shorten the "
+                        f"horizon, or bound the dynamics with wrap_box")
+                sb = self._install(self._host_build(xg, vg, np.asarray(h)))
+                x_ref = sb.x
+                rebuild_steps.append(k + 1)
+
+        traj_np = tel.fetch(traj)[:n_steps]  # (S, D, n_cap, 3), shard layout
+        traj_glob = np.zeros((n_steps, n, 3), np.float32)
+        for pi, idx in enumerate(self._idx):
+            traj_glob[:, idx] = traj_np[:, pi, :idx.size]
+        mse = None
+        if targets is not None:
+            err = np.sum((traj_glob - targets[:n_steps, :n]) ** 2, axis=-1)
+            mse = np.mean(err, axis=-1) / 3.0
+        rebuilds = len(rebuild_steps)
+        return RolloutResult(
+            trajectory=traj_glob, per_step_mse=mse, rebuild_count=rebuilds,
+            steps_per_rebuild=n_steps / (rebuilds + 1), n_steps=n_steps,
+            rebuild_steps=rebuild_steps, trigger_steps=list(rebuild_steps),
+            rebuild_waits=0, chunk_calls=n_steps,
+            recompiles=max(0, tel.traces - base_traces
+                           - (1 if base_traces == 0 else 0)),
+            d2h_bytes=tel.d2h - base[0], h2d_bytes=tel.h2d - base[1],
+            steady_state_d2h_bytes=tel.steady_d2h - base[2])
+
+    def _gather(self, x_sh: np.ndarray, v_sh: np.ndarray,
+                n: int) -> tuple[np.ndarray, np.ndarray]:
+        """Sharded (D, 1, n_cap, 3) state → global (n, 3) arrays."""
+        xg = np.zeros((n, 3), np.float32)
+        vg = np.zeros((n, 3), np.float32)
+        for pi, idx in enumerate(self._idx):
+            xg[idx] = x_sh[pi, 0, :idx.size]
+            vg[idx] = v_sh[pi, 0, :idx.size]
+        return xg, vg

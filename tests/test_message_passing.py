@@ -75,10 +75,13 @@ def test_sort_edges_by_receiver_csr():
     s2, r2 = sort_edges_by_receiver(snd, rcv)
     assert np.all(np.diff(r2) >= 0)  # receiver-monotone
     assert set(zip(s2.tolist(), r2.tolist())) == set(zip(snd.tolist(), rcv.tolist()))
-    # stable: within one receiver, original edge order is preserved
+    # canonical (receiver, sender) order: within one receiver, senders
+    # ascend — the build-order-independent contract the rollout engine's
+    # Verlet lists and the host edge drop's tie-break rely on
+    # (DESIGN.md §10.2)
     for r in np.unique(r2):
-        orig = snd[rcv == r]
-        np.testing.assert_array_equal(s2[r2 == r], orig)
+        np.testing.assert_array_equal(s2[r2 == r],
+                                      np.sort(snd[rcv == r], kind="stable"))
     # empty input round-trips
     s0, r0 = sort_edges_by_receiver(snd[:0], rcv[:0])
     assert s0.size == 0 and r0.size == 0

@@ -1,0 +1,322 @@
+"""Device-resident rollout engine tests (DESIGN.md §10).
+
+The contract under test: the engine's trajectory is the *same physics*
+as the naive rebuild-every-step host loop — the Verlet skin changes only
+the execution schedule — and the steady state never touches the host.
+"""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import message_passing as mp
+from repro.data.loader import sample_to_arrays, make_batch, single_sample_batch
+from repro.data.radius_graph import displacement_exceeds_skin, max_displacement2
+from repro.pipeline import build_pipeline
+
+
+def _scene(n=24, seed=0):
+    rng = np.random.default_rng(seed)
+    x0 = rng.uniform(0.0, 1.0, (n, 3)).astype(np.float32)
+    v0 = (0.003 * rng.standard_normal((n, 3))).astype(np.float32)
+    h = np.ones((n, 1), np.float32)
+    return x0, v0, h
+
+
+@pytest.fixture(scope="module")
+def pipe():
+    return build_pipeline("egnn", jax.random.PRNGKey(0), h_in=1,
+                          n_layers=1, hidden=8)
+
+
+# --------------------------------------------------------------- skin math
+def test_displacement_exceeds_skin_boundary():
+    x_ref = np.zeros((4, 3), np.float32)
+    x = x_ref.copy()
+    skin = 0.25  # binary-exact: skin/2 = 0.125, (skin/2)² = 0.015625
+    assert not bool(displacement_exceeds_skin(x, x_ref, skin))
+    x[2, 0] = 0.5 * skin  # exactly at the budget: still valid
+    assert not bool(displacement_exceeds_skin(x, x_ref, skin))
+    x[2, 0] = 0.5 * skin * 1.001  # past it: rebuild due
+    assert bool(displacement_exceeds_skin(x, x_ref, skin))
+
+
+def test_displacement_masked_nodes_ignored():
+    x_ref = np.zeros((3, 3), np.float32)
+    x = x_ref.copy()
+    x[2] = 10.0  # padded slot drifts arbitrarily
+    mask = np.array([1.0, 1.0, 0.0], np.float32)
+    assert float(max_displacement2(x, x_ref, mask)) == 0.0
+    assert not bool(displacement_exceeds_skin(x, x_ref, 0.1, mask))
+
+
+# ---------------------------------------------------- rebuild trigger exact
+def test_rebuild_triggers_exactly_at_half_skin(pipe):
+    """Sync engine: a rebuild lands exactly at the first step whose
+    displacement from the current reference exceeds skin/2 — never
+    earlier, never later."""
+    x0, v0, h = _scene()
+    skin = 0.05
+    res = pipe.rollout(pipe.params, (x0, v0, h), 10, r=0.5, skin=skin,
+                       dt=0.05, async_rebuild=False, edge_cap=4000)
+    assert res.rebuild_count >= 1  # the scene must actually exercise it
+    lim2 = (0.5 * skin) ** 2
+    ref = x0
+    rebuilds = set(res.rebuild_steps)
+    for k in range(1, res.n_steps):  # step k produced trajectory[k-1]
+        d2 = float(np.max(np.sum((res.trajectory[k - 1] - ref) ** 2, -1)))
+        if k in rebuilds:
+            assert d2 > lim2, f"rebuild at step {k} without a violation"
+            ref = res.trajectory[k - 1]
+        else:
+            assert d2 <= lim2, f"missed rebuild at step {k}"
+
+
+# ------------------------------------------------------- bitwise parity
+def test_skin0_equals_rebuild_every_step_oracle(pipe):
+    """skin=0 runs the rebuild-every-step schedule.  Two claims:
+
+    1. *Bitwise*: at every state along the trajectory, the on-device drop
+       mask (rank under the (d², receiver, sender) lex key) keeps exactly
+       the edge set the host path (`drop_longest_edges` after canonical
+       sort) keeps — including equal-length directed-twin ties at the cut.
+    2. The trajectory matches the host-driven rebuild-every-step loop to
+       fp round-off.  This one is allclose, not array_equal, for a reason
+       outside the engine's contract: the engine's step is compiled
+       inside a ``lax.while_loop`` body while the host loop jits the
+       PredictFn standalone, and XLA may fuse/FMA the two programs
+       differently — a 1-ulp effect on *identical* inputs, observed at
+       isolated steps only.  Bitwise schedule-equivalence, which the
+       engine can and does promise, is
+       test_trajectory_bitwise_independent_of_skin (skin=0 *is* the
+       rebuild-every-step schedule).
+    """
+    import jax.numpy as jnp
+    from repro.rollout.engine import _step_edge_masks
+
+    x0, v0, h = _scene()
+    r, p, dt, steps = 0.5, 0.5, 0.05, 5
+    res = pipe.rollout(pipe.params, (x0, v0, h), steps, r=r, skin=0.0,
+                       dt=dt, drop_rate=p)
+
+    # claim 1: host drop selection == device rank mask, bitwise, at every
+    # state the engine visited (rebuilds happen at each of these).
+    zeros = np.zeros_like(x0)
+    for x in [x0, *res.trajectory[:-1]]:
+        x = np.asarray(x)
+        arr = sample_to_arrays(x, zeros, h, x, r=r, drop_rate=p)
+        kept_host = set(zip(arr["senders"][arr["edge_mask"] > 0].tolist(),
+                            arr["receivers"][arr["edge_mask"] > 0].tolist()))
+        cand = sample_to_arrays(x, zeros, h, x, r=r, drop_rate=0.0)
+        keep = np.asarray(_step_edge_masks(
+            jnp.asarray(x), jnp.asarray(cand["senders"]),
+            jnp.asarray(cand["receivers"]), jnp.asarray(cand["edge_mask"]),
+            np.float32(r) ** 2, p))
+        kept_dev = set(zip(cand["senders"][keep].tolist(),
+                           cand["receivers"][keep].tolist()))
+        assert kept_host == kept_dev
+
+    # claim 2: host-loop trajectory to fp round-off.
+    x, v = x0.copy(), v0.copy()
+    oracle = []
+    for _ in range(steps):
+        batch = make_batch([sample_to_arrays(x, v, h, x, r=r, drop_rate=p)])
+        xp = np.asarray(pipe.predict_fn(pipe.params, batch.graph, None)[0])
+        v = (xp - x) / dt
+        x = xp
+        oracle.append(xp)
+    np.testing.assert_allclose(res.trajectory, np.stack(oracle),
+                               rtol=0, atol=1e-6)
+
+
+def test_trajectory_bitwise_independent_of_skin(pipe):
+    """The skin is an execution knob only: with capacity headroom, the
+    skin>0 (async, Verlet-reuse) trajectory equals the skin=0
+    (rebuild-every-step) one bit for bit — per-step device masking over
+    the canonical (receiver, sender) edge order makes the effective edge
+    set and its fp summation order independent of the rebuild schedule."""
+    x0, v0, h = _scene()
+    kw = dict(r=0.4, dt=0.05, drop_rate=0.5, edge_cap=4000)
+    r0 = pipe.rollout(pipe.params, (x0, v0, h), 8, skin=0.0, **kw)
+    r1 = pipe.rollout(pipe.params, (x0, v0, h), 8, skin=0.4, **kw)
+    assert r1.rebuild_count < 7  # the list was actually reused...
+    assert np.array_equal(r0.trajectory, r1.trajectory)  # ...invisibly
+
+
+def test_async_matches_sync_rebuild(pipe):
+    """The async two-reference stale-list protocol is a scheduling
+    optimisation: bitwise-identical to synchronous rebuilds."""
+    x0, v0, h = _scene()
+    kw = dict(r=0.4, skin=0.15, dt=0.05, drop_rate=0.25, edge_cap=4000)
+    ra = pipe.rollout(pipe.params, (x0, v0, h), 8, async_rebuild=True, **kw)
+    rs = pipe.rollout(pipe.params, (x0, v0, h), 8, async_rebuild=False, **kw)
+    assert np.array_equal(ra.trajectory, rs.trajectory)
+
+
+def test_engine_matches_legacy_host_loop_mse(pipe):
+    """`benchmarks.rollout._rollout_mse` through the new API reproduces
+    the pre-refactor host loop's per-step MSEs on a fixed seed."""
+    from benchmarks.rollout import _rollout_mse
+
+    x0, v0, h = _scene(seed=3)
+    rng = np.random.default_rng(7)
+    # a fake ground-truth trajectory: enough frames for every step
+    xs = np.stack([x0 + 0.01 * k * rng.standard_normal(x0.shape)
+                   for k in range(16)]).astype(np.float32)
+    vs = np.zeros_like(xs)
+    vs[0] = v0
+    dt_frames, n_roll, r, p, dt = 3, 4, 0.5, 0.5, 0.01
+    errs = _rollout_mse(pipe, pipe.params, xs, vs, dt_frames, n_roll, r, p,
+                        dt)
+
+    # the pre-refactor loop, verbatim semantics (minus the gt clamp)
+    x, v = xs[0].copy(), vs[0].copy()
+    legacy = []
+    for k in range(1, n_roll + 1):
+        batch = make_batch([sample_to_arrays(x, v, h, x, r=r, drop_rate=p)])
+        xp = np.asarray(pipe.predict_fn(pipe.params, batch.graph, None)[0])
+        gt = xs[k * dt_frames]
+        legacy.append(float(np.mean(np.sum((xp - gt) ** 2, -1)) / 3.0))
+        v = (xp - x) / (dt_frames * dt)
+        x = xp
+    np.testing.assert_allclose(errs, legacy, rtol=1e-6, atol=1e-12)
+
+
+# ---------------------------------------------------- steady-state contract
+def test_zero_regroups_recompiles_and_host_bytes():
+    """Steady state: zero trace-time regroups (the kernel consumed host
+    layouts), zero chunk recompiles across rebuilds, zero device→host
+    bytes outside rebuild boundaries, and ≤ 2·rebuilds+2 jit dispatches."""
+    x0, v0, h = _scene(n=32)
+    fast = build_pipeline("fast_egnn", jax.random.PRNGKey(0), h_in=1,
+                          n_layers=1, hidden=8, n_virtual=2, s_dim=8,
+                          use_kernel=True)
+    mp.reset_dispatch_counts()
+    res = fast.rollout(fast.params, (x0, v0, h), 8, r=0.4, skin=0.15,
+                       dt=0.05, drop_rate=0.25, edge_cap=4000)
+    counts = mp.dispatch_counts()
+    assert counts.get("edge_layout_regroup", 0) == 0
+    assert counts.get("edge_layout_host", 0) > 0  # host layout consumed
+    assert res.recompiles == 0
+    assert res.steady_state_d2h_bytes == 0
+    assert res.chunk_calls <= 2 * res.rebuild_count + 2
+    # engine reuse: a second run must not retrace the chunk at all
+    res2 = fast.rollout(fast.params, (x0, v0, h), 4, r=0.4, skin=0.15,
+                        dt=0.05, drop_rate=0.25, edge_cap=4000)
+    assert res2.recompiles == 0
+
+
+# ------------------------------------------------------------- API surface
+def test_targets_too_short_raise(pipe):
+    x0, v0, h = _scene()
+    with pytest.raises(ValueError, match="targets cover"):
+        pipe.rollout(pipe.params, (x0, v0, h), 5, r=0.5, dt=0.05,
+                     targets=np.zeros((3,) + x0.shape, np.float32))
+
+
+def test_rollout_targets_helper_raises_instead_of_clamping():
+    from benchmarks.rollout import rollout_targets
+
+    xs = np.zeros((10, 4, 3), np.float32)
+    t = rollout_targets(xs, dt_frames=3, n_roll=3)
+    assert t.shape == (3, 4, 3)
+    with pytest.raises(ValueError, match="refusing to clamp"):
+        rollout_targets(xs, dt_frames=3, n_roll=4)
+
+
+def test_single_sample_batch_capacity_stable():
+    """Same capacities in → identical shapes (and band capacity) out, for
+    scenes with different edge counts — one jitted program serves all."""
+    x0, _, h = _scene(n=20, seed=0)
+    x1, _, _ = _scene(n=20, seed=1)
+    v = np.zeros((20, 3), np.float32)
+    kw = dict(r=0.35, node_cap=24, edge_cap=400, with_layout=True)
+    b0 = single_sample_batch(x0, v, h, **kw)
+    b1 = single_sample_batch(x1 * 0.5, v, h, **kw)  # denser: more edges
+    assert b0.graph.senders.shape == b1.graph.senders.shape == (1, 400)
+    assert b0.graph.x.shape == (1, 24, 3)
+    assert b0.layout.senders.shape == b1.layout.senders.shape
+    assert float(b0.graph.edge_mask.sum()) != float(b1.graph.edge_mask.sum())
+
+
+def test_per_step_mse_matches_manual(pipe):
+    x0, v0, h = _scene()
+    targets = np.stack([x0] * 4)
+    res = pipe.rollout(pipe.params, (x0, v0, h), 4, r=0.5, dt=0.05,
+                       targets=targets)
+    manual = [float(np.mean(np.sum((res.trajectory[k] - x0) ** 2, -1)) / 3.0)
+              for k in range(4)]
+    np.testing.assert_allclose(res.per_step_mse, manual, rtol=1e-6)
+
+
+# ----------------------------------------------------- divergence / wrapping
+def _exploding_predict(params, g, lay):
+    # deterministic 40x-per-step blowup: overflows f32 in ~24 steps
+    return g.x * 40.0
+
+
+def test_diverged_rollout_raises_instead_of_spinning():
+    """Non-finite coordinates make every skin comparison False, so the
+    chunk can no longer advance — the engine must raise, not rebuild at
+    the same NaN state forever."""
+    from repro.rollout.engine import RolloutEngine
+
+    x0, v0, h = _scene()
+    eng = RolloutEngine(_exploding_predict, r=0.5, skin=0.1, dt=0.05)
+    with pytest.raises(FloatingPointError, match="non-finite"):
+        eng.run({}, x0, v0, h, 40)
+
+
+def test_wrap_box_bounds_arbitrary_horizons():
+    """Periodic boundaries keep the same exploding map finite forever:
+    positions stay in [0, box) and velocities are bounded by the wrap."""
+    from repro.rollout.engine import RolloutEngine
+
+    x0, v0, h = _scene()
+    eng = RolloutEngine(_exploding_predict, r=0.5, skin=0.1, dt=0.05,
+                        wrap_box=1.0)
+    res = eng.run({}, x0, v0, h, 40)
+    assert np.isfinite(res.trajectory).all()
+    assert res.trajectory.min() >= 0.0 and res.trajectory.max() < 1.0
+    assert res.recompiles == 0
+
+
+# ---------------------------------------------------------------- mesh path
+def test_dist_rollout_matches_assignment_and_runs():
+    """Mesh rollout on forced host devices: per-shard layout reuse, frozen
+    partition, zero retraces after the first step, trajectory in global
+    node order."""
+    code = """
+    import numpy as np, jax
+    from repro.distributed.dist_egnn import make_gnn_mesh
+    from repro.pipeline import build_pipeline
+
+    rng = np.random.default_rng(0)
+    n = 32
+    x0 = rng.uniform(0, 1, (n, 3)).astype(np.float32)
+    v0 = (0.003 * rng.standard_normal((n, 3))).astype(np.float32)
+    h = np.ones((n, 1), np.float32)
+    pipe = build_pipeline("fast_egnn", jax.random.PRNGKey(0),
+                          mesh=make_gnn_mesh(2), h_in=1, n_layers=1,
+                          hidden=8, n_virtual=2, s_dim=8)
+    res = pipe.rollout(pipe.params, (x0, v0, h), 6, r=0.5, skin=0.1,
+                       dt=0.05, drop_rate=0.25)
+    assert res.trajectory.shape == (6, n, 3)
+    assert np.all(np.isfinite(res.trajectory))
+    assert res.recompiles == 0, res.recompiles
+    assert res.steady_state_d2h_bytes == 0
+    print("OK", res.rebuild_count)
+    """
+    import os
+    env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=2",
+           "PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+    env.update({k: v for k, v in os.environ.items()
+                if k not in env and k != "XLA_FLAGS"})
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         cwd="/root/repo")
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout
