@@ -74,8 +74,15 @@ work_set = sum(int(np.prod(a.shape[1:])) * 4
                for f, a in zip(batches[0]._fields, batches[0])
                if not f.startswith("lay_"))
 mode = pipe.dispatch_report()["mode"]
+# per-host peak resident set: on a multi-host run this is the number the
+# process-sharded stream keeps flat in host count (DESIGN.md §11); here
+# (one process) it tracks the full-build footprint per device count
+import resource
+peak_rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss * 1024
 print(json.dumps(dict(d=D, edges_per_dev=edges, avg_degree=deg,
                       mse=float(err), step_s=t_step, workset_dev_bytes=work_set,
+                      scenes_per_s={batch} / t_step,
+                      peak_rss_bytes=int(peak_rss),
                       dist_kernel_mode=mode,
                       regroups=counts.get("edge_layout_regroup", 0),
                       layout_host=counts.get("edge_layout_host", 0),
@@ -119,12 +126,17 @@ def run(quick: bool = True, record_bench: bool | None = None):
                  f"mse={res['mse']:.5f};edges_per_dev={res['edges_per_dev']:.0f};"
                  f"avg_degree={res['avg_degree']:.2f};"
                  f"workset_dev_B={res['workset_dev_bytes']};"
+                 f"scenes_per_s={res['scenes_per_s']:.2f};"
+                 f"peak_rss_B={res['peak_rss_bytes']};"
                  f"dist_kernel_mode={res['dist_kernel_mode']}")
             dist_rows.append(dict(
                 kind="dist_edge", source="table45", d=d, n=n_nodes,
                 use_kernel=use_kernel,
                 dist_kernel_mode=res["dist_kernel_mode"],
-                step_us=res["step_s"] * 1e6, regroups=res["regroups"],
+                step_us=res["step_s"] * 1e6,
+                scenes_per_s=res["scenes_per_s"],
+                peak_rss_bytes=res["peak_rss_bytes"],
+                regroups=res["regroups"],
                 layout_host=res["layout_host"],
                 layout_builds=res.get("layout_builds")))
     if record_bench:

@@ -196,6 +196,50 @@ def virtual_pathway(params, h: Array, x: Array, vs: VirtualState, mv: Array,
     return dx, mh, dz_sum, ms_sum
 
 
+def launch_virtual_sums(
+    dz_sum: Array,
+    ms_sum: Array,
+    n_local: Array,
+    axis_name: Optional[str] = None,
+) -> tuple[Array, Array, Array]:
+    """Issue the Eqs. 16–17 collectives (the *communication* half).
+
+    Returns the globally-reduced ``(dz_sum, ms_sum, n)`` triple.  The psums
+    are issued here and the tiny ``phi_s`` epilogue lives in
+    :func:`finish_virtual_aggregate`, so a caller can put arbitrary local
+    compute between launch and finish — DistEGNN's overlap schedule issues
+    these before the banded edge pathway of the *next* layer and consumes
+    them after it, letting XLA's latency-hiding scheduler run the
+    all-reduce under the edge kernel (DESIGN.md §11).  Splitting at the
+    psum boundary keeps the reduction order — and hence the floats —
+    identical to the serialized path.
+    """
+    if axis_name is not None:
+        dz_sum = jax.lax.psum(dz_sum, axis_name)
+        ms_sum = jax.lax.psum(ms_sum, axis_name)
+        n_local = jax.lax.psum(n_local, axis_name)
+    return dz_sum, ms_sum, n_local
+
+
+def finish_virtual_aggregate(
+    params,
+    vs: VirtualState,
+    dz_sum: Array,
+    ms_sum: Array,
+    n_total: Array,
+) -> VirtualState:
+    """Apply Eqs. 8–9's ``phi_Z``/``phi_S`` epilogue to already-reduced sums
+    (the *compute* half of :func:`launch_virtual_sums`)."""
+    n = jnp.maximum(n_total, 1.0)
+    z_new = vs.z + dz_sum / n
+    s_in = jnp.concatenate([vs.s, ms_sum / n], axis=-1)  # (C, S+hidden)
+    if params["phi_s"][0]["w"].ndim == 3:
+        ds = jax.vmap(lambda p, f: mlp(p, f))(params["phi_s"], s_in)  # (C, S)
+    else:  # shared weights (Global Nodes ablation)
+        ds = mlp(params["phi_s"], s_in)
+    return VirtualState(z=z_new, s=vs.s + ds)
+
+
 def virtual_aggregate_from_sums(
     params,
     vs: VirtualState,
@@ -205,18 +249,8 @@ def virtual_aggregate_from_sums(
     axis_name: Optional[str] = None,
 ) -> VirtualState:
     """Complete Eqs. 8–9 (or 16–17 with ``axis_name``) from the node sums."""
-    if axis_name is not None:
-        dz_sum = jax.lax.psum(dz_sum, axis_name)
-        ms_sum = jax.lax.psum(ms_sum, axis_name)
-        n_local = jax.lax.psum(n_local, axis_name)
-    n = jnp.maximum(n_local, 1.0)
-    z_new = vs.z + dz_sum / n
-    s_in = jnp.concatenate([vs.s, ms_sum / n], axis=-1)  # (C, S+hidden)
-    if params["phi_s"][0]["w"].ndim == 3:
-        ds = jax.vmap(lambda p, f: mlp(p, f))(params["phi_s"], s_in)  # (C, S)
-    else:  # shared weights (Global Nodes ablation)
-        ds = mlp(params["phi_s"], s_in)
-    return VirtualState(z=z_new, s=vs.s + ds)
+    return finish_virtual_aggregate(
+        params, vs, *launch_virtual_sums(dz_sum, ms_sum, n_local, axis_name))
 
 
 def virtual_aggregate(
@@ -239,12 +273,25 @@ def virtual_aggregate(
                                        jnp.sum(node_mask), axis_name)
 
 
-def masked_com(x: Array, node_mask: Array, axis_name: Optional[str] = None) -> Array:
-    """CoM over real nodes, optionally all-reduced (Alg. 1 line 4)."""
+def masked_com_sums(x: Array, node_mask: Array,
+                    axis_name: Optional[str] = None) -> tuple[Array, Array]:
+    """Issue the CoM collective: globally-reduced ``(Σ m_i x_i, Σ m_i)``.
+
+    The launch half of :func:`masked_com` — DistEGNN's overlap schedule
+    issues this before the layer's banded edge pathway and divides after
+    it (DESIGN.md §11); the psum order is unchanged, so the resulting CoM
+    is bitwise the serialized one.
+    """
     w = node_mask[:, None]
     tot = jnp.sum(x * w, axis=0)
     cnt = jnp.sum(w)
     if axis_name is not None:
         tot = jax.lax.psum(tot, axis_name)
         cnt = jax.lax.psum(cnt, axis_name)
+    return tot, cnt
+
+
+def masked_com(x: Array, node_mask: Array, axis_name: Optional[str] = None) -> Array:
+    """CoM over real nodes, optionally all-reduced (Alg. 1 line 4)."""
+    tot, cnt = masked_com_sums(x, node_mask, axis_name)
     return tot / jnp.maximum(cnt, 1.0)

@@ -23,6 +23,21 @@ Every layout build in the data plane goes through :func:`get_or_build`
 meaningful telemetry signal rather than an inference from timings.
 Writes are atomic (tempfile + ``os.replace``), so the stream's worker
 threads — and concurrent runs sharing one cache dir — cannot tear entries.
+
+Multi-*process* runs sharing one cache dir (the process-sharded stream of
+DESIGN.md §11 — hosts overlap on entries only when shard ranges collide
+or a re-run changes the process count) additionally coordinate through a
+**build claim**: the first writer to create ``<key>.claim``
+(``O_CREAT|O_EXCL`` — atomic on POSIX and NFS-safe enough for a cache)
+owns the build; a loser re-checks the entry once (the owner may already
+have finished) and otherwise *builds anyway* — a duplicate build is
+wasted work, never a correctness problem (entries are content-addressed,
+so both writers produce byte-identical payloads) — counted as
+``duplicate_builds`` in :func:`cache_stats` so tests and benchmarks can
+assert cross-process dedup actually happened.  Claims are best-effort:
+never blocked on, expired after :data:`CLAIM_TTL_S` (a crashed owner
+must not wedge the cache), and an existence re-check before ``store``
+skips rewriting an entry the owner already landed.
 """
 from __future__ import annotations
 
@@ -30,6 +45,7 @@ import hashlib
 import os
 import tempfile
 import threading
+import time
 
 import numpy as np
 
@@ -37,10 +53,14 @@ from repro.data.radius_graph import BandedCSR, banded_csr_layout
 
 _FORMAT_VERSION = 1
 
+#: a claim file older than this is a crashed/stalled owner — steal it
+CLAIM_TTL_S = 300.0
+
 # build/hit telemetry (module-level, mirroring message_passing's dispatch
 # counters): "the warm run rebuilt nothing" must be counted, not inferred —
 # locked, because the stream's worker threads record concurrently
-_STATS = {"builds": 0, "hits": 0, "misses": 0, "errors": 0}
+_STATS = {"builds": 0, "hits": 0, "misses": 0, "errors": 0,
+          "duplicate_builds": 0}
 _STATS_LOCK = threading.Lock()
 
 
@@ -136,9 +156,52 @@ class LayoutCache:
             return None
         return lay
 
-    def store(self, key: str, lay: BandedCSR) -> None:
+    def claim(self, key: str) -> bool:
+        """Try to claim the build of ``key`` (multi-process dedup).
+
+        Returns True when this process now owns the build.  A fresh claim
+        by another writer returns False; a claim older than
+        :data:`CLAIM_TTL_S` is stolen (unlink + retry once).  Failures
+        report ownership — a cache that cannot coordinate degrades to
+        every writer building, which is correct, just duplicated.
+        """
+        path = self._path(key) + ".claim"
+        for _ in range(2):
+            try:
+                fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+                with os.fdopen(fd, "w") as f:
+                    f.write(f"pid={os.getpid()}\n")
+                return True
+            except FileExistsError:
+                try:
+                    if time.time() - os.path.getmtime(path) <= CLAIM_TTL_S:
+                        return False
+                    os.unlink(path)  # stale: steal and retry the create
+                except OSError:
+                    return False  # owner raced us (released/refreshed)
+            except OSError:
+                return True
+        return False
+
+    def release(self, key: str) -> None:
+        try:
+            os.unlink(self._path(key) + ".claim")
+        except OSError:
+            pass
+
+    def store(self, key: str, lay: BandedCSR,
+              overwrite: bool = True) -> None:
         """Atomic write (tempfile + rename) — safe under worker threads and
-        concurrent runs; failures degrade to an unsaved entry."""
+        concurrent runs; failures degrade to an unsaved entry.
+
+        ``overwrite=False`` leaves an existing entry alone: losers of a
+        multi-process build claim pass it so they don't re-land a payload
+        the owner already wrote (content-addressed keys ⇒ identical
+        bytes; skipping is an optimisation, not a correctness need).
+        Repairs of stale/corrupt entries must overwrite (the default).
+        """
+        if not overwrite and os.path.exists(self._path(key)):
+            return
         payload = {k: getattr(lay, k) for k in _ARRAY_FIELDS}
         payload.update({k: np.asarray(getattr(lay, k)) for k in _SCALAR_FIELDS})
         try:
@@ -162,6 +225,12 @@ def get_or_build(cache: LayoutCache | None, snd: np.ndarray, rcv: np.ndarray,
     With a cache: content-hash lookup, stale/corrupt entries rebuilt and
     rewritten.  Without: plain build.  Either way the telemetry counters
     record what happened.
+
+    On a miss the build is claimed (``<key>.claim``, ``O_CREAT|O_EXCL``)
+    so concurrent *processes* sharing the cache dir don't all build the
+    same entry.  Losing the claim never blocks: the entry is re-checked
+    once (the owner may have finished) and otherwise built anyway, with
+    the wasted work counted as ``duplicate_builds``.
     """
     if cache is None:
         _record("builds")
@@ -173,8 +242,20 @@ def get_or_build(cache: LayoutCache | None, snd: np.ndarray, rcv: np.ndarray,
         _record("hits")
         return lay
     _record("misses")
+    repair = os.path.exists(cache._path(key))  # present but stale/corrupt
+    owned = cache.claim(key)
+    if not owned:
+        lay = cache.load(key, n_nodes, block_e)  # owner may have landed it
+        if lay is not None:
+            _record("hits")
+            return lay
+        _record("duplicate_builds")
     _record("builds")
-    lay = banded_csr_layout(snd, rcv, n_nodes, edge_mask=edge_mask,
-                            block_e=block_e)
-    cache.store(key, lay)
+    try:
+        lay = banded_csr_layout(snd, rcv, n_nodes, edge_mask=edge_mask,
+                                block_e=block_e)
+        cache.store(key, lay, overwrite=owned or repair)
+    finally:
+        if owned:
+            cache.release(key)
     return lay

@@ -220,11 +220,23 @@ def partition_sample(
     e_cap: int | None = None,
     seed: int = 0,
     layout_cache=None,
+    shard_range: tuple[int, int] | None = None,
 ) -> PartitionedGraph:
     """Partition one large graph into d padded shards with local radius graphs.
 
     Matches the paper's protocol: partition first, then each device builds its
     own local graph with the (fixed or dynamically grown) cutoff radius.
+
+    ``shard_range=(lo, hi)`` builds only shards ``lo..hi-1`` (the returned
+    leading dim is ``hi - lo``) — the multi-process data plane's
+    process-local mode (DESIGN.md §11): the *assignment* is still computed
+    globally (it is cheap and deterministic in ``seed``, so every process
+    agrees on membership), but radius graphs, padding and banded layouts
+    are built only for the local shards.  A partial range requires an
+    explicit ``e_cap``: the default edge capacity is a max over *all*
+    shards' edge counts, which a process that built only its own shards
+    cannot know — and processes disagreeing on capacities would assemble a
+    ragged global array.
     """
     n = x.shape[0]
     rng = np.random.default_rng(seed)
@@ -236,10 +248,19 @@ def partition_sample(
     else:
         raise ValueError(f"unknown partition strategy {strategy!r}")
 
+    lo, hi = (0, d) if shard_range is None else shard_range
+    if not (0 <= lo < hi <= d):
+        raise ValueError(f"shard_range {shard_range} outside [0, {d})")
+    if (lo, hi) != (0, d) and e_cap is None:
+        raise ValueError(
+            "partition_sample: a partial shard_range needs an explicit "
+            "e_cap — the default is the max over all shards' edge counts, "
+            "which a process building only its own shards cannot compute "
+            "consistently (pin edge_cap on the stream / call site)")
     if n_cap is None:
         n_cap = int(np.ceil(n / d))
     shards = []
-    for p in range(d):
+    for p in range(lo, hi):
         idx = np.nonzero(assign == p)[0]
         xs, vs, hs, ts = x[idx], v[idx], h[idx], x_target[idx]
         snd, rcv = radius_graph(xs, r)

@@ -127,6 +127,8 @@ class BatchStream:
         block_e: Optional[int] = None,
         n_shards: Optional[int] = None,
         partition: str = "random",
+        mesh=None,
+        process_sharded: Optional[bool] = None,
     ):
         self._samples = list(samples)
         self.batch_size = int(batch_size)
@@ -142,6 +144,32 @@ class BatchStream:
         self.block_e = block_e
         self.n_shards = n_shards
         self.partition = partition
+        self.mesh = mesh
+        # multi-process mesh mode (DESIGN.md §11): each host builds only
+        # its own contiguous block of graph shards; the device convert
+        # assembles the global array from the per-process local rows.
+        # Defaults on exactly when the jax runtime is multi-process.
+        self._shard_range = None
+        if n_shards is not None:
+            import jax
+
+            if process_sharded is None:
+                process_sharded = jax.process_count() > 1
+            if process_sharded and jax.process_count() > 1:
+                from repro.distributed.sharding import process_shard_range
+
+                if mesh is None:
+                    raise ValueError(
+                        "BatchStream: process-sharded mode needs the mesh "
+                        "(global-array assembly is sharding-aware) — pass "
+                        "mesh=... or build via Pipeline.make_batches")
+                if edge_cap is None:
+                    raise ValueError(
+                        "BatchStream: process-sharded mode needs an explicit "
+                        "edge_cap — the default capacity is a max over all "
+                        "shards' edge counts, which a host building only its "
+                        "own shards cannot compute consistently")
+                self._shard_range = process_shard_range(n_shards)
         if cache_dir is not None:
             from repro.data.layout_cache import LayoutCache
 
@@ -285,11 +313,16 @@ class BatchStream:
         from repro.distributed.dist_egnn import stack_partitions_host
 
         def build(idxs):
+            # shard_range: process-local rows only (the global assignment
+            # inside partition_sample is deterministic in the seed, so
+            # every host agrees on membership)
             pgs = [partition_sample(s.x0, s.v0, sample_h(s), s.x1,
                                     d=self.n_shards, r=self.r,
                                     strategy=self.partition,
                                     drop_rate=self.drop_rate, seed=j,
-                                    layout_cache=self._cache)
+                                    e_cap=self.edge_cap,
+                                    layout_cache=self._cache,
+                                    shard_range=self._shard_range)
                    for j, s in enumerate(self._samples[i] for i in idxs)]
             return stack_partitions_host(pgs, layout_cache=self._cache)
 
@@ -333,6 +366,11 @@ class BatchStream:
     # ------------------------------------------------------- device convert
     def _to_device(self, host):
         if self.n_shards is not None:
+            if self.mesh is not None:
+                from repro.distributed.sharding import (
+                    sharded_batch_from_process_local)
+
+                return sharded_batch_from_process_local(self.mesh, host)
             from repro.distributed.dist_egnn import sharded_batch_to_device
 
             return sharded_batch_to_device(host)

@@ -4,6 +4,10 @@ One large geometric graph is split into D padded shards (data/partition.py);
 each mesh slot along the ``graph`` axis processes its local subgraph while
 the shared, ordered virtual nodes are re-synchronised with ``psum`` inside
 every layer (Eqs. 16–17 — implemented by ``fast_egnn_apply(axis_name=...)``).
+By default the layer schedule is comm/compute-*overlapped* (DESIGN.md §11.1):
+each layer's virtual collectives are issued before/under the banded edge
+pathway and consumed after it, bit-identical to the serialized schedule;
+``overlap=`` on the builders below overrides ``cfg.overlap_sync``.
 
 Gradient flow through the collective is automatic: ``jax.grad`` of a
 ``shard_map``-ed program produces the psum-of-cotangents backward rule that
@@ -177,15 +181,38 @@ def _edge_layout(sb: ShardedBatch) -> EdgeLayout:
         meta=LayoutMeta(window, swindow, n_pad, EDGE_KERNEL_BLOCK_E))
 
 
-def build_dist_apply(cfg: FastEGNNConfig, mesh: Mesh):
+def _resolve_overlap(cfg: FastEGNNConfig,
+                     overlap: Optional[bool]) -> FastEGNNConfig:
+    """Pin the layer schedule for a dist program build.
+
+    ``overlap=None`` keeps ``cfg.overlap_sync`` (default: overlapped);
+    an explicit bool overrides it — the parity harness builds both
+    schedules from one config this way.  See DESIGN.md §11: the
+    overlapped schedule issues each layer's virtual-node collectives
+    before the banded edge pathway so the all-reduce runs under the edge
+    compute; it is float-identical to the serialized one.
+    """
+    if overlap is None:
+        return cfg
+    return cfg._replace(overlap_sync=bool(overlap))
+
+
+def build_dist_apply(cfg: FastEGNNConfig, mesh: Mesh,
+                     overlap: Optional[bool] = None):
     """Jitted distributed forward: (params, ShardedBatch) → x_pred (D,B,n_cap,3).
 
     Params replicated; batch sharded on the graph axis.  With
     ``cfg.use_kernel`` each shard's local edge pathway runs the banded
     Pallas kernel, consuming the batch's host-precomputed layout (zero
     trace-time regrouping); shards whose spec/VMEM budget fails the
-    eligibility check fall back to the identical-math jnp path.
+    eligibility check fall back to the identical-math jnp path.  With
+    ``cfg.overlap_sync`` (or ``overlap=True``) every layer's virtual-node
+    collectives are issued before its edge pathway and consumed after —
+    the comm/compute overlap schedule of DESIGN.md §11, trace-counted as
+    ``'collective_overlapped'`` vs ``'collective_serialized'`` in the
+    dispatch telemetry.
     """
+    cfg = _resolve_overlap(cfg, overlap)
     specs = ShardedBatch(*([P(GRAPH_AXIS)] * len(ShardedBatch._fields)))
 
     def shard_body(params, sb: ShardedBatch):
@@ -210,13 +237,20 @@ def build_dist_apply(cfg: FastEGNNConfig, mesh: Mesh):
 
 
 def build_dist_train_step(cfg: FastEGNNConfig, mesh: Mesh, opt: Adam,
-                          lam_mmd: float = 0.01, mmd_sigma: float = 1.5):
+                          lam_mmd: float = 0.01, mmd_sigma: float = 1.5,
+                          overlap: Optional[bool] = None):
     """Distributed train step implementing Eq. 18 + Alg. 1.
 
     The loss is the global masked MSE (psum across shards) plus λ × the mean
     over shards of the *local* MMD term — exactly Σ_d L_d / D.  ``jax.grad``
     through shard_map yields the synchronized gradients of Alg. 1 line 10.
+
+    ``overlap`` pins the layer schedule (default: ``cfg.overlap_sync``,
+    i.e. comm/compute-overlapped — DESIGN.md §11).  Both schedules produce
+    identical losses and gradients; the overlapped one gives XLA a full
+    edge pathway between each collective's launch and first use.
     """
+    cfg = _resolve_overlap(cfg, overlap)
     specs = ShardedBatch(*([P(GRAPH_AXIS)] * len(ShardedBatch._fields)))
 
     def shard_loss(params, sb: ShardedBatch):

@@ -17,9 +17,12 @@ from repro.core.message_passing import clamp_vector_norm
 from repro.core.mlp import init_mlp, mlp
 from repro.core.virtual_nodes import (
     VirtualState,
+    finish_virtual_aggregate,
     init_virtual_block,
     init_virtual_coords,
+    launch_virtual_sums,
     masked_com,
+    masked_com_sums,
     virtual_aggregate_from_sums,
     virtual_global_message,
     virtual_pathway,
@@ -46,6 +49,12 @@ class FastEGNNConfig(NamedTuple):
     # kernel compute precision ('f32' | 'bf16'); bf16 computes in bfloat16
     # with f32 accumulation inside the fused kernels (DESIGN.md §9)
     precision: str = "f32"
+    # DistEGNN comm/compute overlap (DESIGN.md §11): issue each layer's
+    # virtual-node collectives before the banded edge pathway and consume
+    # them after it, so the all-reduce runs under the edge compute.  Only
+    # takes effect with an axis_name (single-device has no collectives);
+    # float-identical to the serialized schedule (same psums, same order).
+    overlap_sync: bool = True
 
     def egnn(self) -> EGNNConfig:
         return EGNNConfig(
@@ -107,8 +116,20 @@ def fast_egnn_apply(
     x = g.x
     z0 = init_virtual_coords(x, g.node_mask, cfg.n_virtual, axis_name)
     vs = VirtualState(z=z0, s=params["s_init"])
+    overlap = axis_name is not None and getattr(cfg, "overlap_sync", False)
+    if overlap:
+        return _apply_overlapped(params, cfg, g, h, x, vs, axis_name,
+                                 edge_layout)
+
+    from repro.core.message_passing import record_dispatch
 
     for lp in params["layers"]:
+        if axis_name is not None:
+            # two serialized collective groups per layer: the CoM psum and
+            # the Eqs. 16–17 aggregate psum both complete before any
+            # dependent compute is issued (cf. 'collective_overlapped')
+            record_dispatch("collective_serialized")
+            record_dispatch("collective_serialized")
         com = masked_com(x, g.node_mask, axis_name)  # Alg. 1 line 4
         mv = virtual_global_message(vs.z, com)  # Eq. 4
         dx_v, mh_v, dz_sum, ms_sum = virtual_pathway(
@@ -132,4 +153,57 @@ def fast_egnn_apply(
         vs = virtual_aggregate_from_sums(lp["virtual"], vs, dz_sum, ms_sum,
                                          jnp.sum(g.node_mask), axis_name)
         x = x_new
+    return x, h, vs
+
+
+def _apply_overlapped(params, cfg: FastEGNNConfig, g: GeometricGraph,
+                      h: Array, x: Array, vs: VirtualState, axis_name: str,
+                      edge_layout) -> tuple[Array, Array, VirtualState]:
+    """The comm/compute-overlapped DistEGNN layer schedule (DESIGN.md §11).
+
+    Software-pipelined over the layers: each layer's CoM psum is *issued*
+    before its banded edge pathway, and the Eqs. 16–17 aggregate psum is
+    issued at the end of layer ``l`` but only *consumed* (the tiny
+    ``phi_s`` epilogue) after layer ``l+1``'s edge pathway has been
+    issued.  The edge pathway depends on neither collective — it reads
+    only ``(h^{(l)}, x^{(l)})`` — so in program order every all-reduce has
+    a full edge kernel between launch and first use, which is exactly the
+    window XLA's latency-hiding scheduler overlaps.  The psum operands,
+    reduction order and epilogue math are unchanged, so the result is
+    float-identical to the serialized schedule (the parity test in
+    ``tests/test_multiprocess.py`` pins this).
+    """
+    from repro.core.message_passing import record_dispatch
+
+    pending = None  # (layer_params, vs, dz, ms, n): psums in flight
+    for lp in params["layers"]:
+        record_dispatch("collective_overlapped")  # CoM psum, issued early
+        tot, cnt = masked_com_sums(x, g.node_mask, axis_name)
+        dx_r, mh_r = real_real_pathway(lp, h, x, g, cfg.coord_clamp,
+                                       cfg.use_kernel,
+                                       edge_layout=edge_layout,
+                                       precision=cfg.precision)  # Eqs. 3, 6-7
+        if pending is not None:  # consume layer l-1's aggregate psums
+            vs = finish_virtual_aggregate(*pending)
+            pending = None
+        com = tot / jnp.maximum(cnt, 1.0)  # Alg. 1 line 4
+        mv = virtual_global_message(vs.z, com)  # Eq. 4
+        dx_v, mh_v, dz_sum, ms_sum = virtual_pathway(
+            lp["virtual"], h, x, vs, mv, g.node_mask,
+            use_kernel=cfg.use_kernel, precision=cfg.precision)  # Eq. 5
+        dx_v = clamp_vector_norm(dx_v, cfg.coord_clamp)
+        dx = dx_r + dx_v
+        if cfg.velocity:
+            dx = dx + mlp(lp["phi_v"], h) * g.v
+        x_new = x + dx * g.node_mask[:, None]  # Eq. 6
+        h = h + mlp(lp["phi_h"], jnp.concatenate([h, mh_r, mh_v], axis=-1))  # Eq. 7
+        # Eqs. 16–17 collectives launched here (pre-update coordinates
+        # x^{(l)} — same operands as the serialized path), finished after
+        # the *next* layer's edge pathway
+        record_dispatch("collective_overlapped")
+        sums = launch_virtual_sums(dz_sum, ms_sum, jnp.sum(g.node_mask),
+                                   axis_name)
+        pending = (lp["virtual"], vs, *sums)
+        x = x_new
+    vs = finish_virtual_aggregate(*pending)  # drain the last layer's psums
     return x, h, vs

@@ -74,9 +74,11 @@ class Pipeline:
       * mesh: ``predict_fn(params, ShardedBatch)`` → ``(D, B, n_cap, 3)``
         — the jitted ``shard_map`` forward.
 
-    :meth:`predict` is a thin batch-unpacking wrapper over it, and
-    :meth:`rollout` *composes* it — the rollout engine re-jits nothing of
-    the model, it wraps this same program in its while_loop chunk.
+    :meth:`predict` is a thin batch-unpacking wrapper over it.
+    :meth:`rollout` *composes* the model surface in its while_loop chunk:
+    single-device it wraps ``predict_fn`` directly; on a mesh it wraps
+    ``apply_full`` in its own ``shard_map`` (the jitted shard_map forward
+    cannot nest inside the chunk's shard_map — DESIGN.md §11).
     """
 
     def __init__(self, name: str, cfg: Any, params: Any, apply_full: Callable,
@@ -100,7 +102,8 @@ class Pipeline:
                      reshuffle_each_epoch: bool = False,
                      cache_dir: Optional[str] = None,
                      prefetch: Optional[int] = None,
-                     num_workers: Optional[int] = None) -> "BatchStream":
+                     num_workers: Optional[int] = None,
+                     edge_cap: Optional[int] = None) -> "BatchStream":
         """Raw samples → a :class:`~repro.data.stream.BatchStream` of
         fixed-shape, layout-carrying batches (DESIGN.md §8).
 
@@ -125,6 +128,13 @@ class Pipeline:
         configs skip the numpy layout pass and its device arrays.  On the
         mesh path layouts are structural ``ShardedBatch`` fields and
         always built.
+
+        On a *multi-process* mesh pipeline the stream runs process-sharded
+        (DESIGN.md §11): each host builds only its own block of graph
+        shards and the global ``ShardedBatch`` is assembled from the
+        per-process local rows — host memory and layout-build time stay
+        flat in the host count.  That mode pins the edge capacity, so
+        ``edge_cap`` is required there (and optional everywhere else).
         """
         from repro.data.stream import (DEFAULT_PREFETCH, DEFAULT_WORKERS,
                                        BatchStream)
@@ -132,13 +142,13 @@ class Pipeline:
         if with_layout is None:
             with_layout = bool(getattr(self.cfg, "use_kernel", False))
         return BatchStream(
-            samples, batch_size, r=r, drop_rate=drop_rate,
+            samples, batch_size, r=r, drop_rate=drop_rate, edge_cap=edge_cap,
             shuffle_seed=shuffle_seed, with_layout=with_layout,
             reshuffle_each_epoch=reshuffle_each_epoch, cache_dir=cache_dir,
             prefetch=DEFAULT_PREFETCH if prefetch is None else prefetch,
             num_workers=DEFAULT_WORKERS if num_workers is None else num_workers,
             n_shards=None if self.mesh is None else self.mesh.devices.size,
-            partition=partition)
+            partition=partition, mesh=self.mesh)
 
     # --------------------------------------------------------------- steps
     def _build_steps(self):
@@ -267,10 +277,11 @@ class Pipeline:
                     async_rebuild=async_rebuild, wrap_box=wrap_box)
             else:
                 eng = DistRolloutEngine(
-                    self.predict_fn, d=self.mesh.devices.size, r=r,
+                    self.apply_full, self.cfg, self.mesh, r=r,
                     skin=skin, dt=dt, drop_rate=drop_rate,
                     strategy=partition, seed=seed, n_cap=node_cap,
-                    e_cap=edge_cap, wrap_box=wrap_box)
+                    e_cap=edge_cap, async_rebuild=async_rebuild,
+                    wrap_box=wrap_box)
             self._rollout_engines[key] = eng
         return eng.run(params, x0, v0, h, n_steps, targets=targets,
                        traj_capacity=traj_capacity)

@@ -38,10 +38,12 @@ the model step.  This module keeps the recursion *on device*:
 :class:`RolloutEngine` is model-agnostic: it composes any ``PredictFn``
 ``(params, graph(B,·), layout|None) -> (B, N, 3)`` — in practice the one
 ``Pipeline._build_steps`` builds — and is surfaced as ``Pipeline.rollout``.
-:class:`DistRolloutEngine` is the mesh sibling: host-stepped (one scalar
-fetch per step), but with the partition assignment frozen and every
-rebuild reusing the per-shard capacities and banded layouts, so the
-``shard_map`` program never retraces either.
+:class:`DistRolloutEngine` is the mesh sibling: the same while_loop chunk
+runs *inside* ``shard_map`` (DESIGN.md §11), with the skin criterion
+``pmax``-reduced across shards so every shard exits the loop on the same
+step — one scalar fetch per chunk, not per step — and the partition
+assignment frozen so every rebuild reuses the per-shard capacities and
+banded layouts (zero retraces, zero steady-state d2h, same contract).
 """
 from __future__ import annotations
 
@@ -492,46 +494,65 @@ class RolloutEngine:
 
 
 class DistRolloutEngine:
-    """Mesh-path rollout: per-shard Verlet lists + banded-layout reuse.
+    """Mesh-path rollout: the while_loop chunk *inside* ``shard_map``.
 
-    ``dist_predict(params, ShardedBatch) -> (D, B=1, n_cap, 3)`` is the
-    ``shard_map`` forward (``Pipeline.predict_fn`` on a mesh pipeline).
+    ``apply_full(params, cfg, g, axis_name=..., edge_layout=...)`` is the
+    registry per-shard forward (``Pipeline.apply_full``) — the engine
+    wraps it in its own ``shard_map`` because the pipeline's jitted
+    ``shard_map`` forward cannot nest inside another one.  Each shard
+    carries its local (x, v) and steps its Verlet list exactly like
+    :class:`RolloutEngine`; the skin criterion is the ``pmax`` across
+    shards of the local masked max displacement², so the ``lax.while_loop``
+    condition is *uniform* — every shard exits on the same step and the
+    only per-chunk host traffic is one step-count fetch (steady-state
+    d2h is structurally zero, the property ``--gate-rollout`` asserts).
+
     The partition assignment is computed **once** at the initial positions
     and frozen for the whole rollout — shard membership changing mid-
     trajectory would reshuffle every carried buffer; with the per-shard
     node/edge/band capacities also pinned at the first build, rebuilds
-    swap operands under one fixed shard_map program (zero retraces, the
-    same contract as the single-device chunk).  The inner loop is
-    host-*stepped* (the skin criterion is one scalar fetch per step — the
-    trajectory itself stays device-resident); folding it into a
-    while_loop chunk like the single-device engine is future work noted
-    in DESIGN.md §10.
+    swap operands under one fixed program (zero retraces).  Rebuilds run
+    the PR-7 two-reference async protocol per shard: the build is
+    submitted at ``rebuild_margin`` of the skin budget and the stale list
+    keeps stepping, bounded by both the old reference and the pending
+    build's reference (DESIGN.md §10.5 / §11).
     """
 
-    def __init__(self, dist_predict: Callable, *, d: int, r: float,
+    def __init__(self, apply_full: Callable, cfg, mesh, *, r: float,
                  skin: float, dt: float, drop_rate: float = 0.0,
                  strategy: str = "random", seed: int = 0,
                  n_cap: Optional[int] = None, e_cap: Optional[int] = None,
-                 edge_headroom: float = DEFAULT_EDGE_HEADROOM,
+                 async_rebuild: Optional[bool] = None,
+                 rebuild_margin: float = 0.5,
+                 edge_headroom: float = DEFAULT_EDGE_HEADROOM, pool=None,
                  wrap_box: Optional[float] = None):
         if skin < 0:
             raise ValueError(f"skin must be >= 0, got {skin}")
+        if not 0 < rebuild_margin <= 1:
+            raise ValueError(f"rebuild_margin must be in (0, 1], got "
+                             f"{rebuild_margin}")
         if wrap_box is not None and not wrap_box > 0:
             raise ValueError(f"wrap_box must be > 0, got {wrap_box}")
-        self.dist_predict = dist_predict
-        self.d = int(d)
+        self.apply_full = apply_full
+        self.cfg = cfg
+        self.mesh = mesh
+        self.d = int(mesh.devices.size)
         self.r = float(r)
         self.skin = float(skin)
         self.dt = float(dt)
         self.drop_rate = float(drop_rate)
         self.strategy = strategy
         self.seed = int(seed)
+        self.rebuild_margin = float(rebuild_margin)
         self.edge_headroom = float(edge_headroom)
         self.wrap_box = None if wrap_box is None else float(wrap_box)
+        self.async_rebuild = (skin > 0 if async_rebuild is None
+                              else bool(async_rebuild))
         self._n_cap = n_cap
         self._e_cap = e_cap
+        self._pool = pool
         self._tel = _Telemetry()
-        self._step = None
+        self._chunk = None
         self._traj_cap = 0
         self._idx = None  # per-shard global node indices (frozen)
 
@@ -597,40 +618,97 @@ class DistRolloutEngine:
         self._tel.uploaded(*host.values())
         return sharded_batch_to_device(host)
 
-    def _build_step(self) -> Callable:
+    def _build_chunk(self) -> Callable:
+        """One jitted shard_map program: per-shard while_loop with a
+        ``pmax``-reduced skin criterion.
+
+        Each shard drops its size-1 local (D, B) leading dims and runs the
+        single-device chunk body on its local subgraph, calling the
+        registry forward with ``axis_name`` so the per-layer virtual-node
+        psums run inside the loop body.  The loop *condition* reduces the
+        local masked max displacement² with ``pmax`` — a collective in the
+        cond — so the decision to stop is global and uniform: no shard
+        can run ahead, and the host only ever reads the final step count.
+        Thresholds/references/start/budget are operands, so phase A
+        (trigger threshold) and phase B (old + pending references) share
+        one trace, exactly like :meth:`RolloutEngine._build_chunk`.
+        """
+        from repro.distributed.dist_egnn import (GRAPH_AXIS, ShardedBatch,
+                                                 _edge_layout, _local_graph,
+                                                 _shard_map, _SHARD_MAP_KW)
+        from jax.sharding import PartitionSpec as P
+
         r2 = np.float32(self.r) ** 2
         p = self.drop_rate
         dt = self.dt
+        cfg = self.cfg
+        use_kernel = bool(getattr(cfg, "use_kernel", False))
 
-        def step(params, sb, x_ref, traj, k):
+        def shard_body(params, sb, x, v, ref_a, ref_b, traj,
+                       start, budget, lim_a2, lim_b2):
+            sbe = jax.tree.map(lambda a: a[0, 0], sb)  # local D=1, B=1
+            nm = sbe.node_mask
+            ra, rb = ref_a[0], ref_b[0]
+
+            def gdisp2(xc, ref):
+                d2 = jnp.max(jnp.sum((xc - ref) ** 2, axis=-1) * nm)
+                return jax.lax.pmax(d2, GRAPH_AXIS)
+
+            def cond(c):
+                i, xc, _, _ = c
+                return ((i < budget) & (gdisp2(xc, ra) <= lim_a2)
+                        & (gdisp2(xc, rb) <= lim_b2))
+
+            def body(c):
+                i, xc, vc, traj = c
+                keep = _step_edge_masks(xc, sbe.senders, sbe.receivers,
+                                        sbe.edge_mask, r2, p)
+                g = _local_graph(sbe)._replace(
+                    x=xc, v=vc, edge_mask=keep.astype(jnp.float32))
+                if use_kernel:
+                    lk = _step_edge_masks(xc, sbe.lay_senders,
+                                          sbe.lay_receivers,
+                                          sbe.lay_edge_mask, r2, p)
+                    lay = _edge_layout(sbe._replace(
+                        lay_edge_mask=lk.astype(jnp.float32)))
+                else:
+                    lay = None
+                xp = self.apply_full(params, cfg, g, axis_name=GRAPH_AXIS,
+                                     edge_layout=lay)[0]
+                xp = jnp.where(nm[:, None] > 0, xp, 0.0)
+                if self.wrap_box is not None:
+                    b = jnp.float32(self.wrap_box)
+                    xp = xp - b * jnp.floor(xp / b)
+                vn = (xp - xc) / dt
+                traj = jax.lax.dynamic_update_slice(
+                    traj, xp[None, None], (0, start + i, 0, 0))
+                return i + jnp.int32(1), xp, vn, traj
+
+            i, xf, vf, traj = jax.lax.while_loop(
+                cond, body, (jnp.int32(0), x[0], v[0], traj))
+            return xf[None], vf[None], traj, i[None]
+
+        sb_specs = ShardedBatch(
+            *([P(GRAPH_AXIS)] * len(ShardedBatch._fields)))
+        mapped = _shard_map(
+            shard_body, mesh=self.mesh,
+            in_specs=(P(), sb_specs) + (P(GRAPH_AXIS),) * 5 + (P(),) * 4,
+            out_specs=(P(GRAPH_AXIS),) * 4, **_SHARD_MAP_KW)
+
+        def chunk(params, sb, x, v, ref_a, ref_b, traj,
+                  start, budget, lim_a2, lim_b2):
             self._tel.traces += 1
+            return mapped(params, sb, x, v, ref_a, ref_b, traj,
+                          start, budget, lim_a2, lim_b2)
 
-            def one(x, snd, rcv, em, ls, lr, lem):
-                keep = _step_edge_masks(x, snd, rcv, em, r2, p)
-                lk = _step_edge_masks(x, ls, lr, lem, r2, p)
-                return keep.astype(jnp.float32), lk.astype(jnp.float32)
-
-            km, lkm = jax.vmap(jax.vmap(one))(
-                sb.x, sb.senders, sb.receivers, sb.edge_mask,
-                sb.lay_senders, sb.lay_receivers, sb.lay_edge_mask)
-            xp = self.dist_predict(
-                params, sb._replace(edge_mask=km, lay_edge_mask=lkm))
-            xp = jnp.where(sb.node_mask[..., None] > 0, xp, 0.0)
-            if self.wrap_box is not None:
-                b = jnp.float32(self.wrap_box)
-                xp = xp - b * jnp.floor(xp / b)
-            vn = (xp - sb.x) / dt
-            d2 = jnp.max(jnp.sum((xp - x_ref) ** 2, axis=-1)
-                         * sb.node_mask)
-            traj = jax.lax.dynamic_update_slice(
-                traj, xp[:, 0][None], (k, 0, 0, 0))
-            return sb._replace(x=xp, v=vn), d2, traj
-
-        return jax.jit(step)
+        donate = (6,) if jax.default_backend() != "cpu" else ()
+        return jax.jit(chunk, donate_argnums=donate)
 
     def run(self, params, x0, v0, h, n_steps: int, *,
             targets: Optional[np.ndarray] = None,
             traj_capacity: Optional[int] = None) -> RolloutResult:
+        from repro.data.stream import shared_worker_pool
+
         n_steps = int(n_steps)
         if n_steps <= 0:
             raise ValueError(f"n_steps must be positive, got {n_steps}")
@@ -649,38 +727,72 @@ class DistRolloutEngine:
         self._freeze_assignment(x0)
         tel = self._tel
         base = (tel.d2h, tel.h2d, tel.steady_d2h)
-        sb = self._install(self._host_build(x0, np.asarray(v0),
-                                            np.asarray(h)))
-        if self._step is None:
-            self._step = self._build_step()
+        h_np = np.asarray(h)
+        sb = self._install(self._host_build(x0, np.asarray(v0), h_np))
+        x, v = sb.x[:, 0], sb.v[:, 0]  # carried state, (D, n_cap, 3)
+        if self._chunk is None:
+            self._chunk = self._build_chunk()
         # monotone buffer capacity, same contract as RolloutEngine.run:
-        # shorter re-runs reuse the compiled step with zero retraces
+        # shorter re-runs reuse the compiled chunk with zero retraces
         self._traj_cap = max(self._traj_cap, n_steps, int(traj_capacity or 0))
-        traj = jnp.zeros((self._traj_cap, self.d, self._n_cap, 3),
+        traj = jnp.zeros((self.d, self._traj_cap, self._n_cap, 3),
                          jnp.float32)
-        lim2 = (0.5 * self.skin) ** 2
-        x_ref = sb.x
+
+        inf = np.float32(np.inf)
+        lim2 = np.float32((0.5 * self.skin) ** 2)
+        trig2 = (np.float32((self.rebuild_margin * 0.5 * self.skin) ** 2)
+                 if self.async_rebuild else lim2)
+        pool = None
+        x_ref = x
+        pending = None  # (future, x_trigger) during an async build
+        done = 0
+        chunk_calls = 0
+        waits = 0
         rebuild_steps: list[int] = []
+        trigger_steps: list[int] = []
         base_traces = tel.traces
-        for k in range(n_steps):
-            sb, d2, traj = self._step(params, sb, x_ref, traj, np.int32(k))
-            if k + 1 < n_steps and float(tel.fetch(d2)) > lim2:
-                # list may miss a radius-r pair from here on: rebuild
-                # before the next step at the frozen assignment/capacities
-                xg, vg = self._gather(tel.fetch(sb.x), tel.fetch(sb.v), n)
+        while done < n_steps:
+            if pending is None:  # phase A: fresh list, watch the trigger
+                refs, lims = (x_ref, x_ref), (trig2, inf)
+            else:  # phase B: stale list, bounded by old ref AND trigger ref
+                refs, lims = (x_ref, pending[1]), (lim2, lim2)
+            x, v, traj, i = self._chunk(
+                params, sb, x, v, refs[0], refs[1], traj,
+                np.int32(done), np.int32(n_steps - done), lims[0], lims[1])
+            chunk_calls += 1
+            done += int(tel.fetch(i)[0])  # uniform across shards (pmax cond)
+            if done >= n_steps:
+                break
+            if pending is None:
+                trigger_steps.append(done)
+                xg, vg = self._gather(tel.fetch(x), tel.fetch(v), n)
                 if not np.isfinite(xg).all():
                     raise FloatingPointError(
                         f"rollout diverged: non-finite coordinates after "
-                        f"step {k + 1} — train the model, shorten the "
+                        f"step {done} — train the model, shorten the "
                         f"horizon, or bound the dynamics with wrap_box")
-                sb = self._install(self._host_build(xg, vg, np.asarray(h)))
-                x_ref = sb.x
-                rebuild_steps.append(k + 1)
+                if self.async_rebuild:
+                    if pool is None:
+                        pool = self._pool or shared_worker_pool()
+                    pending = (pool.submit(self._host_build, xg, vg, h_np),
+                               x)
+                else:
+                    sb = self._install(self._host_build(xg, vg, h_np))
+                    x_ref = x
+                    rebuild_steps.append(done)
+            else:
+                fut, x_trig = pending
+                if not fut.done():
+                    waits += 1  # budget ran out before the build landed
+                sb = self._install(fut.result())
+                x_ref = x_trig
+                rebuild_steps.append(done)
+                pending = None
 
-        traj_np = tel.fetch(traj)[:n_steps]  # (S, D, n_cap, 3), shard layout
+        traj_np = tel.fetch(traj)[:, :n_steps]  # (D, S, n_cap, 3)
         traj_glob = np.zeros((n_steps, n, 3), np.float32)
         for pi, idx in enumerate(self._idx):
-            traj_glob[:, idx] = traj_np[:, pi, :idx.size]
+            traj_glob[:, idx] = traj_np[pi, :, :idx.size]
         mse = None
         if targets is not None:
             err = np.sum((traj_glob - targets[:n_steps, :n]) ** 2, axis=-1)
@@ -689,8 +801,8 @@ class DistRolloutEngine:
         return RolloutResult(
             trajectory=traj_glob, per_step_mse=mse, rebuild_count=rebuilds,
             steps_per_rebuild=n_steps / (rebuilds + 1), n_steps=n_steps,
-            rebuild_steps=rebuild_steps, trigger_steps=list(rebuild_steps),
-            rebuild_waits=0, chunk_calls=n_steps,
+            rebuild_steps=rebuild_steps, trigger_steps=trigger_steps,
+            rebuild_waits=waits, chunk_calls=chunk_calls,
             recompiles=max(0, tel.traces - base_traces
                            - (1 if base_traces == 0 else 0)),
             d2h_bytes=tel.d2h - base[0], h2d_bytes=tel.h2d - base[1],
@@ -698,10 +810,10 @@ class DistRolloutEngine:
 
     def _gather(self, x_sh: np.ndarray, v_sh: np.ndarray,
                 n: int) -> tuple[np.ndarray, np.ndarray]:
-        """Sharded (D, 1, n_cap, 3) state → global (n, 3) arrays."""
+        """Sharded (D, n_cap, 3) state → global (n, 3) arrays."""
         xg = np.zeros((n, 3), np.float32)
         vg = np.zeros((n, 3), np.float32)
         for pi, idx in enumerate(self._idx):
-            xg[idx] = x_sh[pi, 0, :idx.size]
-            vg[idx] = v_sh[pi, 0, :idx.size]
+            xg[idx] = x_sh[pi, :idx.size]
+            vg[idx] = v_sh[pi, :idx.size]
         return xg, vg
