@@ -1,11 +1,12 @@
-"""Simulation-as-a-service launcher: serve recursive rollouts from a scene.
+"""Simulation client: one scene through the rollout serving plane.
 
-The serving entry point for the GNN simulation plane (DESIGN.md §10): load
-or synthesise one scene, run the device-resident rollout engine behind
-``Pipeline.rollout``, report trajectory statistics and the engine's own
-transfer/retrace accounting.  Single-scene batches go through
-``loader.single_sample_batch`` — the one place a B=1 batch is assembled —
-so a warm server reuses one jitted program for every request shape.
+The CLI is now a thin one-request client of :class:`repro.serving.
+RolloutService` (DESIGN.md §12): load or synthesise a scene, submit it,
+stream frames as they arrive at rebuild boundaries, and report the
+trajectory statistics plus the service's own metrics snapshot — so the
+single-scene path and the many-concurrent-requests path exercise the
+same admission/batching/program-cache code.  (``launch/serve.py`` is
+the unrelated LM-seed decoder; the GNN service is ``repro.serving``.)
 
   PYTHONPATH=src python -m repro.launch.simulate --n 1024 --steps 100
   PYTHONPATH=src python -m repro.launch.simulate --scene scene.npz \
@@ -18,18 +19,33 @@ import numpy as np
 
 
 def load_scene(args) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """(x0, v0, h) from ``--scene file.npz`` (keys x, v[, h]) or synthetic."""
+    """(x0, v0, h) from ``--scene file.npz`` (keys x, v[, h]) or synthetic.
+
+    The ``.npz`` is validated up front — shapes x ``(n,3)``, v ``(n,3)``,
+    h ``(n,f)``, floating dtypes, finite values — so a malformed scene
+    fails here with a clear message instead of a trace error three
+    layers down in the jitted chunk.
+    """
+    from repro.serving import validate_scene
+
     if args.scene:
         z = np.load(args.scene)
-        x = np.asarray(z["x"], np.float32)
-        v = np.asarray(z["v"], np.float32)
-        h = (np.asarray(z["h"], np.float32) if "h" in z
-             else np.ones((x.shape[0], 1), np.float32))
-        return x, v, h
+        if "x" not in z or "v" not in z:
+            raise SystemExit(
+                f"{args.scene}: .npz must contain keys 'x' and 'v' "
+                f"(optionally 'h'), found {sorted(z.keys())}")
+        x = np.asarray(z["x"])
+        v = np.asarray(z["v"])
+        h = (np.asarray(z["h"]) if "h" in z
+             else np.ones((x.shape[0] if x.ndim >= 1 else 0, 1), np.float32))
+        try:
+            return validate_scene(x, v, h, name=args.scene)
+        except ValueError as e:
+            raise SystemExit(str(e)) from None
     rng = np.random.default_rng(args.seed)
     x = rng.uniform(0.0, 1.0, (args.n, 3)).astype(np.float32)
     v = (0.01 * rng.standard_normal((args.n, 3))).astype(np.float32)
-    return x, v, np.ones((args.n, 1), np.float32)
+    return validate_scene(x, v, np.ones((args.n, 1), np.float32))
 
 
 def main(argv=None) -> int:
@@ -59,8 +75,8 @@ def main(argv=None) -> int:
 
     import jax
 
-    from repro.data.loader import single_sample_batch
     from repro.pipeline import build_pipeline
+    from repro.serving import RolloutService
 
     x0, v0, h = load_scene(args)
     n = x0.shape[0]
@@ -78,28 +94,33 @@ def main(argv=None) -> int:
     pipe = build_pipeline(args.model, jax.random.PRNGKey(args.seed),
                           use_kernel=args.use_kernel, **kw)
 
-    # warm the forward program on the single-scene entry point before the
-    # serving loop (the same PredictFn the rollout engine composes)
-    batch = single_sample_batch(x0, v0, h, r=r, drop_rate=args.drop_rate,
-                                with_layout=args.use_kernel)
-    pipe.predict(pipe.params, batch).block_until_ready()
+    with RolloutService(pipe, model=args.model) as svc:
+        t0 = time.perf_counter()
+        handle = svc.submit(x0, v0, h, args.steps, r=r, skin=skin,
+                            dt=args.dt, drop_rate=args.drop_rate,
+                            wrap_box=wrap_box)
+        streamed = 0
+        t_first = None
+        for _frame in handle.frames():
+            if t_first is None:
+                t_first = time.perf_counter() - t0
+            streamed += 1
+        tr = handle.result()
+        wall = time.perf_counter() - t0
+    # after close() the worker has joined, so the metrics snapshot is
+    # complete (streaming releases clients before batch bookkeeping)
+    m = svc.metrics()
 
-    t0 = time.perf_counter()
-    res = pipe.rollout(pipe.params, (x0, v0, h), args.steps, r=r, skin=skin,
-                       dt=args.dt, drop_rate=args.drop_rate,
-                       wrap_box=wrap_box)
-    wall = time.perf_counter() - t0
-    tr = res.trajectory
     print(f"scene n={n}  r={r:.4f}  skin={skin:.4f}  model={args.model}"
           f"{' +kernel' if args.use_kernel else ''}"
           f"{f'  box={wrap_box:g}' if wrap_box else ''}")
-    print(f"{res.n_steps} steps in {wall:.2f}s "
-          f"({res.n_steps / wall:.1f} steps/s, first run includes compile)")
-    print(f"rebuilds {res.rebuild_count} ({res.steps_per_rebuild:.1f} "
-          f"steps/list), async waits {res.rebuild_waits}, "
-          f"chunk dispatches {res.chunk_calls}, recompiles {res.recompiles}")
-    print(f"host bytes: d2h {res.d2h_bytes}, h2d {res.h2d_bytes}, "
-          f"steady-state d2h {res.steady_state_d2h_bytes}")
+    print(f"{streamed} steps in {wall:.2f}s "
+          f"({streamed / wall:.1f} steps/s, first run includes compile); "
+          f"first frame streamed at {t_first:.2f}s")
+    cache = m["program_cache"]
+    print(f"serving: queue wait {handle.queue_wait_s * 1e3:.1f}ms, "
+          f"compute {m['compute_mean_s']:.2f}s, programs built "
+          f"{cache['builds']} (cache {cache['size']}/{cache['capacity']})")
     print(f"trajectory span: |x| max {np.abs(tr).max():.3f}, "
           f"final-step mean displacement "
           f"{np.linalg.norm(tr[-1] - (tr[-2] if len(tr) > 1 else x0), axis=-1).mean():.4f}")

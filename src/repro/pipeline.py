@@ -40,6 +40,10 @@ from repro.training.trainer import FitResult, TrainConfig
 
 Array = jax.Array
 
+#: max live rollout engines per pipeline — each holds a compiled chunk
+#: and a donated device trajectory buffer; LRU-evicted beyond this
+ROLLOUT_ENGINE_CACHE = 4
+
 
 class Pipeline:
     """A model + its training machinery behind one uniform surface.
@@ -92,7 +96,11 @@ class Pipeline:
         self.opt = Adam(lr=train_cfg.lr, weight_decay=train_cfg.weight_decay,
                         grad_clip=train_cfg.grad_clip)
         self._steps = None
-        self._rollout_engines: dict = {}
+        # bounded: each engine pins a compiled chunk + donated trajectory
+        # buffer, and serving traffic with varied capacity keys must not
+        # accumulate them without limit (DESIGN.md §12)
+        from repro.serving.programs import LRUCache
+        self._rollout_engines = LRUCache(ROLLOUT_ENGINE_CACHE)
 
     # ------------------------------------------------------------- batches
     def make_batches(self, samples, batch_size: int, *, r: float = np.inf,
@@ -248,7 +256,9 @@ class Pipeline:
         ground-truth frames, one per step — short arrays raise) adds
         ``per_step_mse``.  On a mesh pipeline the rollout routes through
         the frozen-``partition`` per-shard layouts.  Engines are cached
-        per parameter set, so repeated calls reuse the jitted chunk;
+        in a bounded LRU (``ROLLOUT_ENGINE_CACHE`` keys — size exposed in
+        :meth:`dispatch_report`), so repeated calls reuse the jitted
+        chunk while varied capacity keys cannot leak device buffers;
         ``traj_capacity`` pre-sizes the trajectory buffer so a short
         warmup run compiles the exact program a longer run dispatches.
         ``wrap_box`` applies periodic boundary conditions (positions
@@ -282,7 +292,7 @@ class Pipeline:
                     strategy=partition, seed=seed, n_cap=node_cap,
                     e_cap=edge_cap, async_rebuild=async_rebuild,
                     wrap_box=wrap_box)
-            self._rollout_engines[key] = eng
+            self._rollout_engines.put(key, eng)
         return eng.run(params, x0, v0, h, n_steps, targets=targets,
                        traj_capacity=traj_capacity)
 
@@ -320,7 +330,8 @@ class Pipeline:
         counts = mp.dispatch_counts()
         use_kernel = bool(getattr(self.cfg, "use_kernel", False))
         return dict(counts=counts, use_kernel=use_kernel,
-                    mode=mp.dispatch_mode(counts, use_kernel, backend_mode()))
+                    mode=mp.dispatch_mode(counts, use_kernel, backend_mode()),
+                    rollout_engine_cache=self._rollout_engines.stats())
 
 
 def build_pipeline(name: str, key, *, mesh=None,

@@ -1,5 +1,7 @@
-"""Device-resident recursive rollout (DESIGN.md §10)."""
-from repro.rollout.engine import (DistRolloutEngine, RolloutEngine,
+"""Device-resident recursive rollout (DESIGN.md §10, §12)."""
+from repro.rollout.engine import (BatchedRolloutEngine, BatchedRolloutResult,
+                                  DistRolloutEngine, RolloutEngine,
                                   RolloutResult)
 
-__all__ = ["RolloutEngine", "DistRolloutEngine", "RolloutResult"]
+__all__ = ["RolloutEngine", "BatchedRolloutEngine", "BatchedRolloutResult",
+           "DistRolloutEngine", "RolloutResult"]

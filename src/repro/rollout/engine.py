@@ -493,6 +493,337 @@ class RolloutEngine:
             steady_state_d2h_bytes=tel.steady_d2h - base[2])
 
 
+@dataclass
+class BatchedRolloutResult:
+    """What a batched rollout returns — per-scene trajectories plus the
+    shared engine accounting.
+
+    ``trajectories[j]`` is scene ``j``'s predicted positions, real nodes
+    only — bitwise what an independent single-scene
+    :class:`RolloutEngine` run at the same capacities would produce (the
+    per-scene compute is the same vmapped program slot by slot, and the
+    per-step masking makes the result independent of the batch-global
+    rebuild schedule).  The telemetry fields carry the same contract as
+    :class:`RolloutResult`: ``steady_state_d2h_bytes`` is structurally
+    zero, ``recompiles`` counts chunk retraces after the first, and one
+    rebuild covers *all* scenes (``rebuild_count`` is batch-global).
+    """
+
+    trajectories: list  # per real scene: (n_steps, n_j, 3) float32
+    n_steps: int
+    n_scenes: int
+    batch_size: int
+    rebuild_count: int
+    rebuild_steps: list = field(default_factory=list)
+    chunk_calls: int = 0
+    recompiles: int = 0
+    d2h_bytes: int = 0
+    h2d_bytes: int = 0
+    steady_state_d2h_bytes: int = 0
+
+
+class BatchedRolloutEngine:
+    """Jit-resident rollout over a *stack* of same-capacity scenes.
+
+    The serving plane's workhorse (DESIGN.md §12): ``batch_size`` scenes,
+    every one padded to the same pinned ``(node_cap, edge_cap)`` capacity
+    bucket and one band geometry, step together through a single vmapped
+    ``lax.while_loop`` chunk.  The loop condition reduces the per-scene
+    skin criteria with *any* (a max over the batched masked
+    displacements²), so the chunk exits uniformly — every scene takes the
+    same number of steps per chunk and a rebuild covers all scenes at
+    once, with the per-scene host builds submitted to the shared worker
+    pool concurrently.
+
+    Per-scene results are bitwise equal to ``batch_size`` independent
+    single-scene :class:`RolloutEngine` runs at the same capacities and
+    seeds: the body vmaps the exact single-scene step (the same
+    ``_step_edge_masks`` rank selection, the same ``PredictFn``), each
+    batch slot's computation is slot-independent, and the any-reduced
+    exit only changes *when* lists rebuild — which the per-step masking
+    makes invisible (DESIGN.md §10).  ``tests/test_serving.py`` asserts
+    the parity in both kernel modes.
+
+    Unlike :class:`RolloutEngine`, every capacity is pinned at
+    *construction* (serving knows its buckets up front), so the cache key
+    ``(model, capacity bucket, band geometry, batch size)`` fully
+    determines the compiled program: admitting any scene of the bucket
+    never retraces.  A short batch (``len(scenes) < batch_size``) pads
+    the remaining slots with replicas of the last scene — replicas
+    compute identical trajectories (slot-independent determinism), so
+    they never perturb the uniform exit, and they are dropped from the
+    result.  Rebuilds are synchronous (but host-parallel across scenes);
+    the trajectory buffer is donated between chunks and its capacity is
+    monotone, so shorter re-runs reuse the compiled chunk.
+    """
+
+    def __init__(self, predict_fn: Callable, *, batch_size: int,
+                 node_cap: int, edge_cap: int, r: float, skin: float,
+                 dt: float, drop_rate: float = 0.0,
+                 with_layout: bool = False, block_e: Optional[int] = None,
+                 wrap_box: Optional[float] = None, pool=None):
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        if skin < 0:
+            raise ValueError(f"skin must be >= 0, got {skin}")
+        if wrap_box is not None and not wrap_box > 0:
+            raise ValueError(f"wrap_box must be > 0, got {wrap_box}")
+        from repro.core.message_passing import EDGE_KERNEL_BLOCK_E
+        from repro.kernels.edge_message import layout_capacity, pick_windows
+
+        self.predict_fn = predict_fn
+        self.batch_size = int(batch_size)
+        self.node_cap = int(node_cap)
+        self.edge_cap = int(edge_cap)
+        self.r = float(r)
+        self.skin = float(skin)
+        self.dt = float(dt)
+        self.drop_rate = float(drop_rate)
+        self.with_layout = bool(with_layout)
+        self.wrap_box = None if wrap_box is None else float(wrap_box)
+        self._block_e = int(block_e or EDGE_KERNEL_BLOCK_E)
+        self._window, self._swindow, n_pad = pick_windows(self.node_cap)
+        nw, nsw = n_pad // self._window, n_pad // self._swindow
+        self._lay_cap = layout_capacity(self.edge_cap, nw, nsw,
+                                        self._block_e)
+        self._pool = pool
+        self._chunk = None
+        self._traj_cap = 0
+        self._tel = _Telemetry()
+        self._g: Optional[GeometricGraph] = None
+        self._lay = None
+
+    @property
+    def band_geometry(self) -> tuple[int, int]:
+        """(window, swindow) — the pinned band geometry, part of the
+        serving program-cache key."""
+        return (self._window, self._swindow)
+
+    @property
+    def traces(self) -> int:
+        """Lifetime chunk traces (1 after the first run; serving's
+        steady-state gate asserts it never grows again)."""
+        return self._tel.traces
+
+    # ------------------------------------------------------------- host side
+    def _host_build_scene(self, x_np: np.ndarray) -> dict:
+        """One scene's Verlet list (+ layout) at the pinned capacities —
+        pure numpy, worker-thread safe (same product as
+        :meth:`RolloutEngine._host_build`)."""
+        snd, rcv = radius_graph(x_np, self.r + self.skin)
+        snd, rcv = sort_edges_by_receiver(snd, rcv)
+        sp, rp, em = pad_edges(snd, rcv, self.edge_cap, x_np)
+        out = dict(senders=sp, receivers=rp, edge_mask=em)
+        if self.with_layout:
+            out["layout"] = banded_csr_layout(
+                sp, rp, self.node_cap, edge_mask=em, window=self._window,
+                swindow=self._swindow, block_e=self._block_e,
+                capacity=self._lay_cap)
+        return out
+
+    def _build_scenes(self, scene_x: list) -> list:
+        """All real scenes' host builds, concurrently on the worker pool."""
+        from repro.data.stream import shared_worker_pool
+
+        if len(scene_x) == 1:
+            return [self._host_build_scene(scene_x[0])]
+        pool = self._pool or shared_worker_pool()
+        futs = [pool.submit(self._host_build_scene, x) for x in scene_x]
+        return [f.result() for f in futs]
+
+    def _install(self, builds: list, slot_src: list) -> None:
+        """Swap per-scene host builds in as the stacked chunk operands.
+        ``slot_src[b]`` maps batch slot ``b`` to its (real) scene build —
+        padding slots replicate the last real scene."""
+        from repro.kernels.edge_message import layout_from_host
+
+        snd = np.stack([builds[j]["senders"] for j in slot_src])
+        rcv = np.stack([builds[j]["receivers"] for j in slot_src])
+        em = np.stack([builds[j]["edge_mask"] for j in slot_src])
+        self._tel.uploaded(snd, rcv, em)
+        self._g = self._g._replace(
+            senders=jnp.asarray(snd), receivers=jnp.asarray(rcv),
+            edge_mask=jnp.asarray(em))
+        if self.with_layout:
+            for j in set(slot_src):
+                b = builds[j]["layout"]
+                self._tel.uploaded(b.senders, b.receivers, b.edge_mask,
+                                   b.block_rwin, b.block_swin)
+            lays = [layout_from_host(builds[j]["layout"]) for j in slot_src]
+            self._lay = jax.tree.map(lambda *a: jnp.stack(a), *lays)
+
+    # ----------------------------------------------------------- device side
+    def _build_chunk(self) -> Callable:
+        """The one jitted batched program: the single-scene while_loop body
+        vmapped over the scene axis, the exit criterion any-reduced so all
+        scenes leave the loop on the same step."""
+        r2 = np.float32(self.r) ** 2
+        p = self.drop_rate
+        dt = self.dt
+
+        def chunk(params, g, lay, x, v, ref, traj, start, budget, lim2):
+            self._tel.traces += 1
+            nm = g.node_mask  # (B, N)
+            masks = jax.vmap(_step_edge_masks,
+                             in_axes=(0, 0, 0, 0, None, None))
+
+            def cond(c):
+                i, xc, _, _ = c
+                # any scene past its budget ⇒ uniform exit for the batch
+                d2 = jnp.max(jnp.sum((xc - ref) ** 2, axis=-1) * nm)
+                return (i < budget) & (d2 <= lim2)
+
+            def body(c):
+                i, xc, vc, traj = c
+                keep = masks(xc, g.senders, g.receivers, g.edge_mask, r2, p)
+                gi = g._replace(x=xc, v=vc,
+                                edge_mask=keep.astype(jnp.float32))
+                if lay is None:
+                    li = None
+                else:
+                    lk = masks(xc, lay.senders, lay.receivers,
+                               lay.edge_mask, r2, p)
+                    li = type(lay)(lay.senders, lay.receivers,
+                                   lk.astype(jnp.float32),
+                                   lay.block_rwin, lay.block_swin,
+                                   meta=lay.meta)
+                xp = self.predict_fn(params, gi, li)  # (B, N, 3)
+                xp = jnp.where(nm[..., None] > 0, xp, 0.0)
+                if self.wrap_box is not None:
+                    b = jnp.float32(self.wrap_box)
+                    xp = xp - b * jnp.floor(xp / b)
+                vn = (xp - xc) / dt
+                traj = jax.lax.dynamic_update_slice(
+                    traj, xp[:, None], (0, start + i, 0, 0))
+                return i + jnp.int32(1), xp, vn, traj
+
+            i, x, v, traj = jax.lax.while_loop(
+                cond, body, (jnp.int32(0), x, v, traj))
+            return x, v, traj, i
+
+        donate = (6,) if jax.default_backend() != "cpu" else ()
+        return jax.jit(chunk, donate_argnums=donate)
+
+    # ------------------------------------------------------------------- run
+    def run(self, params, scenes, n_steps: int, *,
+            traj_capacity: Optional[int] = None,
+            on_chunk: Optional[Callable] = None) -> BatchedRolloutResult:
+        """Roll 1..``batch_size`` scenes forward together.
+
+        ``scenes`` is a sequence of ``(x0, v0, h)`` numpy triples, each
+        with at most ``node_cap`` nodes (a larger scene belongs to a
+        larger capacity bucket — it raises here).  ``on_chunk``, when
+        given, streams: after every chunk it is called with
+        ``(start_step, frames)`` where ``frames`` is the
+        ``(n_scenes, k, node_cap, 3)`` block of freshly computed
+        positions for steps ``start_step..start_step+k`` — clients see
+        frames at rebuild boundaries, before the horizon completes; the
+        final result is then assembled from the streamed blocks (no
+        second trajectory fetch).
+        """
+        n_steps = int(n_steps)
+        if n_steps <= 0:
+            raise ValueError(f"n_steps must be positive, got {n_steps}")
+        scenes = list(scenes)
+        if not 1 <= len(scenes) <= self.batch_size:
+            raise ValueError(
+                f"got {len(scenes)} scenes for a batch_size="
+                f"{self.batch_size} engine (need 1..{self.batch_size})")
+        n_real = len(scenes)
+        slot_src = (list(range(n_real))
+                    + [n_real - 1] * (self.batch_size - n_real))
+        tel = self._tel
+        base = (tel.d2h, tel.h2d, tel.steady_d2h)
+        base_traces = tel.traces
+
+        xs, vs, hs, ns, nms = [], [], [], [], []
+        for (x0, v0, h) in scenes:
+            x0 = np.asarray(x0, np.float32)
+            if self.wrap_box is not None:
+                b = np.float32(self.wrap_box)
+                x0 = x0 - b * np.floor(x0 / b)
+            n = x0.shape[0]
+            if n > self.node_cap:
+                raise ValueError(
+                    f"scene has {n} nodes but this engine's capacity "
+                    f"bucket is node_cap={self.node_cap} — route it to a "
+                    f"larger bucket")
+            xp, nm = pad_nodes(x0, self.node_cap)
+            vp, _ = pad_nodes(np.asarray(v0, np.float32), self.node_cap)
+            hp, _ = pad_nodes(np.asarray(h, np.float32), self.node_cap)
+            xs.append(xp)
+            vs.append(vp)
+            hs.append(hp)
+            nms.append(nm)
+            ns.append(n)
+        xq = np.stack([xs[j] for j in slot_src])
+        vq = np.stack([vs[j] for j in slot_src])
+        hq = np.stack([hs[j] for j in slot_src])
+        nmq = np.stack([nms[j] for j in slot_src])
+        tel.uploaded(xq, vq, hq, nmq)
+        self._g = GeometricGraph(
+            x=jnp.asarray(xq), v=jnp.asarray(vq), h=jnp.asarray(hq),
+            senders=jnp.zeros((self.batch_size, self.edge_cap), jnp.int32),
+            receivers=jnp.zeros((self.batch_size, self.edge_cap), jnp.int32),
+            edge_attr=jnp.zeros((self.batch_size, self.edge_cap, 0),
+                                jnp.float32),
+            node_mask=jnp.asarray(nmq),
+            edge_mask=jnp.zeros((self.batch_size, self.edge_cap),
+                                jnp.float32))
+        self._install(self._build_scenes([xs[j][:ns[j]]
+                                          for j in range(n_real)]), slot_src)
+        if self._chunk is None:
+            self._chunk = self._build_chunk()
+        self._traj_cap = max(self._traj_cap, n_steps, int(traj_capacity or 0))
+        traj = jnp.zeros((self.batch_size, self._traj_cap, self.node_cap, 3),
+                         jnp.float32)
+
+        lim2 = np.float32((0.5 * self.skin) ** 2)
+        x, v = self._g.x, self._g.v
+        ref = x
+        done = 0
+        chunk_calls = 0
+        rebuild_steps: list[int] = []
+        parts: list[np.ndarray] = []  # streamed frame blocks
+        while done < n_steps:
+            x, v, traj, i = self._chunk(
+                params, self._g, self._lay, x, v, ref, traj,
+                np.int32(done), np.int32(n_steps - done), lim2)
+            chunk_calls += 1
+            k = int(tel.fetch(i))
+            if on_chunk is not None:
+                new = tel.fetch(traj[:, done:done + k])
+                parts.append(new)
+                on_chunk(done, new[:n_real])
+            done += k
+            if done >= n_steps:
+                break
+            x_np = tel.fetch(x)
+            scene_x = [x_np[j, :ns[j]] for j in range(n_real)]
+            if not all(np.isfinite(sx).all() for sx in scene_x):
+                raise FloatingPointError(
+                    f"batched rollout diverged: non-finite coordinates "
+                    f"after step {done} — train the model, shorten the "
+                    f"horizon, or bound the dynamics with wrap_box")
+            self._install(self._build_scenes(scene_x), slot_src)
+            ref = x
+            rebuild_steps.append(done)
+        if on_chunk is not None:
+            full = np.concatenate(parts, axis=1)
+        else:
+            full = tel.fetch(traj)[:, :n_steps]
+        trajectories = [full[j, :n_steps, :ns[j]] for j in range(n_real)]
+        return BatchedRolloutResult(
+            trajectories=trajectories, n_steps=n_steps, n_scenes=n_real,
+            batch_size=self.batch_size,
+            rebuild_count=len(rebuild_steps), rebuild_steps=rebuild_steps,
+            chunk_calls=chunk_calls,
+            recompiles=max(0, tel.traces - base_traces
+                           - (1 if base_traces == 0 else 0)),
+            d2h_bytes=tel.d2h - base[0], h2d_bytes=tel.h2d - base[1],
+            steady_state_d2h_bytes=tel.steady_d2h - base[2])
+
+
 class DistRolloutEngine:
     """Mesh-path rollout: the while_loop chunk *inside* ``shard_map``.
 

@@ -1,0 +1,127 @@
+"""Bounded compiled-program / engine caches for the serving plane.
+
+A serving process sees many (model, capacity bucket, band geometry,
+batch size) combinations over its lifetime; each one owns a compiled
+batched chunk plus donated device buffers.  Left unbounded that is a
+leak — every distinct scene size ever served pins an executable and a
+trajectory buffer forever.  :class:`LRUCache` is the generic bounded
+map (also used to bound ``Pipeline._rollout_engines``), and
+:class:`ProgramCache` specialises it to :class:`ProgramKey` with a
+build-on-miss hook so eviction + re-admission recompiles exactly once.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+
+class LRUCache:
+    """Insertion/access-ordered dict bounded to ``maxsize`` entries.
+
+    ``get`` refreshes recency; ``put`` evicts the least-recently-used
+    entry once full and returns the evicted ``(key, value)`` pair (or
+    ``None``) so callers can release device buffers deterministically.
+    """
+
+    def __init__(self, maxsize: int):
+        if maxsize < 1:
+            raise ValueError(f"maxsize must be >= 1, got {maxsize}")
+        self.maxsize = int(maxsize)
+        self._d: OrderedDict = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __contains__(self, key) -> bool:
+        return key in self._d
+
+    def get(self, key, default=None):
+        if key in self._d:
+            self._d.move_to_end(key)
+            self.hits += 1
+            return self._d[key]
+        self.misses += 1
+        return default
+
+    def put(self, key, value):
+        evicted = None
+        if key in self._d:
+            self._d.move_to_end(key)
+        elif len(self._d) >= self.maxsize:
+            evicted = self._d.popitem(last=False)
+            self.evictions += 1
+        self._d[key] = value
+        return evicted
+
+    def pop(self, key, default=None):
+        return self._d.pop(key, default)
+
+    def keys(self):
+        return list(self._d.keys())
+
+    def stats(self) -> dict:
+        return {"size": len(self._d), "capacity": self.maxsize,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions}
+
+
+@dataclass(frozen=True)
+class ProgramKey:
+    """Cache key for one compiled batched-rollout program.
+
+    ``model`` identifies the parameter set (id of the params pytree is
+    not stable across processes, so the service names models
+    explicitly); band geometry ``(window, swindow)`` is derived from
+    ``node_cap`` today but kept in the key so a future per-bucket
+    geometry override cannot silently alias two different programs.
+    """
+
+    model: str
+    node_cap: int
+    edge_cap: int
+    window: int
+    swindow: int
+    batch_size: int
+    r: float
+    skin: float
+    dt: float
+    drop_rate: float
+    wrap_box: Optional[float]
+
+
+class ProgramCache:
+    """LRU of live engines (compiled program + donated buffers).
+
+    ``get_or_build(key, factory)`` returns the cached engine or builds
+    one, counting ``builds`` so tests and the serving gate can assert
+    "steady-state recompiles == 0" and "evict + re-admit builds exactly
+    once".
+    """
+
+    def __init__(self, maxsize: int):
+        self._lru = LRUCache(maxsize)
+        self.builds = 0
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    def get_or_build(self, key: ProgramKey, factory: Callable[[], object]):
+        eng = self._lru.get(key)
+        if eng is not None:
+            return eng
+        eng = factory()
+        self.builds += 1
+        self._lru.put(key, eng)
+        return eng
+
+    def keys(self):
+        return self._lru.keys()
+
+    def stats(self) -> dict:
+        s = self._lru.stats()
+        s["builds"] = self.builds
+        return s

@@ -1,0 +1,343 @@
+"""Rollout serving plane tests (DESIGN.md §12).
+
+The contracts under test: a batched rollout is bitwise per-scene equal
+to independent single-scene rollouts at the same capacities (both
+kernel modes); the dynamic batcher coalesces only same-bucket scenes
+inside its window; streaming yields every frame in order; the bounded
+program cache recompiles exactly once after eviction + re-admission;
+and a full queue applies backpressure instead of growing.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.pipeline import build_pipeline
+from repro.rollout import BatchedRolloutEngine
+from repro.serving import (AdmissionError, BucketKey, DynamicBatcher,
+                           LRUCache, PendingRequest, ProgramCache, ProgramKey,
+                           QueueFullError, RolloutService, ServiceConfig,
+                           capacity_bucket, validate_scene)
+
+R, SKIN, DT = 0.9, 0.2, 0.1
+NODE_CAP, EDGE_CAP = 16, 256
+
+
+def _scene(n=14, seed=0):
+    rng = np.random.default_rng(seed)
+    x0 = rng.uniform(0.0, 1.0, (n, 3)).astype(np.float32)
+    v0 = (0.003 * rng.standard_normal((n, 3))).astype(np.float32)
+    h = np.ones((n, 1), np.float32)
+    return x0, v0, h
+
+
+@pytest.fixture(scope="module")
+def pipe():
+    return build_pipeline("egnn", jax.random.PRNGKey(0), h_in=1,
+                          n_layers=1, hidden=8)
+
+
+@pytest.fixture(scope="module")
+def pipe_k():
+    return build_pipeline("egnn", jax.random.PRNGKey(0), h_in=1,
+                          n_layers=1, hidden=8, use_kernel=True)
+
+
+def _bucket(node_cap=NODE_CAP, edge_cap=EDGE_CAP, r=R):
+    return BucketKey(node_cap=node_cap, edge_cap=edge_cap, r=r, skin=SKIN,
+                     dt=DT, drop_rate=0.0, wrap_box=None)
+
+
+def _pending(bucket, t, rid, n=14, n_steps=5):
+    x, v, h = _scene(n, seed=rid)
+    return PendingRequest(x0=x, v0=v, h=h, n_steps=n_steps, bucket=bucket,
+                          enqueue_t=t, request_id=rid)
+
+
+# ------------------------------------------------------------ pure caches
+def test_lru_cache_evicts_least_recently_used():
+    lru = LRUCache(2)
+    assert lru.put("a", 1) is None and lru.put("b", 2) is None
+    assert lru.get("a") == 1          # refresh a: b is now LRU
+    assert lru.put("c", 3) == ("b", 2)
+    assert "b" not in lru and "a" in lru and "c" in lru
+    assert lru.stats() == {"size": 2, "capacity": 2, "hits": 1,
+                           "misses": 0, "evictions": 1}
+    assert lru.get("b") is None and lru.misses == 1
+
+
+def test_program_cache_builds_once_per_key():
+    pc = ProgramCache(1)
+    k1 = ProgramKey("m", 16, 256, 8, 4, 2, R, SKIN, DT, 0.0, None)
+    k2 = ProgramKey("m", 32, 512, 8, 4, 2, R, SKIN, DT, 0.0, None)
+    built = []
+    assert pc.get_or_build(k1, lambda: built.append(1) or "e1") == "e1"
+    assert pc.get_or_build(k1, lambda: built.append(1) or "e1b") == "e1"
+    assert pc.builds == 1
+    pc.get_or_build(k2, lambda: "e2")      # evicts k1 (maxsize 1)
+    assert pc.get_or_build(k1, lambda: built.append(1) or "e1c") == "e1c"
+    assert pc.builds == 3 and len(built) == 2  # re-admission: exactly once
+
+
+# --------------------------------------------------------- admission rules
+def test_capacity_bucket_ladder():
+    assert capacity_bucket(1, (16, 32)) == 16
+    assert capacity_bucket(16, (16, 32)) == 16
+    assert capacity_bucket(17, (16, 32)) == 32
+    with pytest.raises(AdmissionError, match="largest configured"):
+        capacity_bucket(33, (16, 32))
+
+
+def test_validate_scene_rejects_malformed():
+    x, v, h = _scene(6)
+    xo, vo, ho = validate_scene(x, v, h)
+    assert xo.dtype == np.float32 and xo.shape == (6, 3)
+    with pytest.raises(AdmissionError, match=r"x must have shape \(n, 3\)"):
+        validate_scene(x[:, :2], v, h)
+    with pytest.raises(AdmissionError, match="v must have shape"):
+        validate_scene(x, v[:5], h)
+    with pytest.raises(AdmissionError, match="h must have shape"):
+        validate_scene(x, v, h[:3])
+    with pytest.raises(AdmissionError, match="floating point"):
+        validate_scene(x, v, h.astype(np.int32))
+    bad = x.copy()
+    bad[2, 1] = np.nan
+    with pytest.raises(AdmissionError, match="non-finite"):
+        validate_scene(bad, v, h)
+    with pytest.raises(AdmissionError, match="empty"):
+        validate_scene(x[:0], v[:0], h[:0])
+
+
+# -------------------------------------------------------- dynamic batching
+def test_batcher_waits_out_window_then_coalesces():
+    b = DynamicBatcher(max_batch=4, window_s=0.1, queue_cap=16)
+    bk = _bucket()
+    b.admit(_pending(bk, t=0.00, rid=0))
+    b.admit(_pending(bk, t=0.04, rid=1))
+    assert b.next_batch(now=0.05) is None        # inside the window
+    assert b.next_deadline() == pytest.approx(0.10)
+    key, batch = b.next_batch(now=0.11)          # oldest is 0.11s old
+    assert key == bk and [p.request_id for p in batch] == [0, 1]
+    assert len(b) == 0 and b.next_batch(now=1.0) is None
+
+
+def test_batcher_full_batch_dispatches_immediately():
+    b = DynamicBatcher(max_batch=2, window_s=10.0, queue_cap=16)
+    bk = _bucket()
+    b.admit(_pending(bk, t=0.0, rid=0))
+    assert b.next_batch(now=0.001) is None
+    b.admit(_pending(bk, t=0.001, rid=1))
+    key, batch = b.next_batch(now=0.001)         # full: no window wait
+    assert [p.request_id for p in batch] == [0, 1]
+
+
+def test_batcher_capacity_isolation_mixed_sizes_never_share():
+    """Scenes in different capacity buckets (or with different physics)
+    never ride one batch, no matter the arrival interleaving."""
+    b = DynamicBatcher(max_batch=4, window_s=0.0, queue_cap=16)
+    small, big = _bucket(16, 256), _bucket(32, 512)
+    other_r = _bucket(16, 256, r=0.5)
+    for t, (rid, bk) in enumerate([(0, small), (1, big), (2, small),
+                                   (3, big), (4, other_r)]):
+        b.admit(_pending(bk, t=float(t), rid=rid))
+    seen = []
+    while (got := b.next_batch(now=100.0)) is not None:
+        key, batch = got
+        assert {p.bucket for p in batch} == {key}  # single-bucket batches
+        seen.append((key, sorted(p.request_id for p in batch)))
+    assert dict(seen) == {small: [0, 2], big: [1, 3], other_r: [4]}
+
+
+def test_batcher_backpressure_queue_full():
+    b = DynamicBatcher(max_batch=4, window_s=0.1, queue_cap=2)
+    bk = _bucket()
+    b.admit(_pending(bk, t=0.0, rid=0))
+    b.admit(_pending(bk, t=0.0, rid=1))
+    with pytest.raises(QueueFullError, match="2/2"):
+        b.admit(_pending(bk, t=0.0, rid=2))
+    b.next_batch(now=1.0)                        # drain
+    b.admit(_pending(bk, t=2.0, rid=3))          # re-admits after drain
+
+
+# -------------------------------------------------- batched rollout parity
+@pytest.mark.parametrize("kernel", [False, True], ids=["jnp", "kernel"])
+def test_batched_rollout_bitwise_parity(pipe, pipe_k, kernel):
+    """The acceptance criterion: a batched rollout over N scenes is
+    bitwise per-scene equal to N independent single-scene rollouts at
+    the same capacities and seeds — in both kernel modes."""
+    p = pipe_k if kernel else pipe
+    scenes = [_scene(14, seed=s) for s in range(3)]
+    eng = BatchedRolloutEngine(
+        p.predict_fn, batch_size=3, node_cap=NODE_CAP, edge_cap=EDGE_CAP,
+        r=R, skin=SKIN, dt=DT, with_layout=kernel)
+    res = eng.run(p.params, scenes, 4)
+    assert res.n_scenes == 3 and res.chunk_calls >= 1
+    for s, (x0, v0, h) in enumerate(scenes):
+        single = p.rollout(p.params, (x0, v0, h), 4, r=R, skin=SKIN, dt=DT,
+                           node_cap=NODE_CAP, edge_cap=EDGE_CAP)
+        assert res.trajectories[s].shape == single.trajectory.shape
+        np.testing.assert_array_equal(res.trajectories[s], single.trajectory)
+    # steady state: the compiled chunk is reused — zero recompiles
+    res2 = eng.run(p.params, scenes, 4)
+    assert res2.recompiles == 0
+    np.testing.assert_array_equal(res2.trajectories[0], res.trajectories[0])
+
+
+def test_short_batch_replica_padding(pipe):
+    """2 scenes in a batch_size=3 engine: padding replicates the last
+    scene, and real-scene results are unchanged bitwise."""
+    scenes = [_scene(14, seed=s) for s in range(2)]
+    eng3 = BatchedRolloutEngine(pipe.predict_fn, batch_size=3,
+                                node_cap=NODE_CAP, edge_cap=EDGE_CAP,
+                                r=R, skin=SKIN, dt=DT)
+    res = eng3.run(pipe.params, scenes, 4)
+    assert res.n_scenes == 2 and res.batch_size == 3
+    for s, (x0, v0, h) in enumerate(scenes):
+        single = pipe.rollout(pipe.params, (x0, v0, h), 4, r=R, skin=SKIN,
+                              dt=DT, node_cap=NODE_CAP, edge_cap=EDGE_CAP)
+        np.testing.assert_array_equal(res.trajectories[s], single.trajectory)
+
+
+def test_streaming_chunks_cover_all_steps_in_order(pipe):
+    """on_chunk blocks are contiguous, in step order, and concatenate to
+    exactly the final trajectories."""
+    scenes = [_scene(14, seed=s) for s in range(2)]
+    eng = BatchedRolloutEngine(pipe.predict_fn, batch_size=2,
+                               node_cap=NODE_CAP, edge_cap=EDGE_CAP,
+                               r=R, skin=SKIN, dt=DT)
+    starts, blocks = [], []
+    res = eng.run(pipe.params, scenes, 6,
+                  on_chunk=lambda s, f: (starts.append(s), blocks.append(f)))
+    assert res.chunk_calls >= 2, "scene too tame to exercise streaming"
+    assert starts[0] == 0
+    for i in range(1, len(starts)):  # contiguous coverage, ascending
+        assert starts[i] == starts[i - 1] + blocks[i - 1].shape[1]
+    full = np.concatenate(blocks, axis=1)
+    assert full.shape[1] == 6
+    for s in range(2):
+        np.testing.assert_array_equal(full[s, :, :14], res.trajectories[s])
+
+
+# ------------------------------------------------------------- the service
+def _svc_cfg(**kw):
+    base = dict(max_batch=4, window_s=0.25, queue_cap=16,
+                node_buckets=(16, 32), edge_cap_per_node=16)
+    base.update(kw)
+    return ServiceConfig(**base)
+
+
+def test_service_coalesces_streams_and_truncates_horizons(pipe):
+    """Two same-bucket requests with different horizons share one batch;
+    each streams exactly its own n_steps frames, in order, bitwise equal
+    to its independent single-scene rollout."""
+    (xa, va, ha), (xb, vb, hb) = _scene(14, seed=0), _scene(12, seed=1)
+    with RolloutService(pipe, config=_svc_cfg()) as svc:
+        h1 = svc.submit(xa, va, ha, 3, r=R, skin=SKIN, dt=DT)
+        h2 = svc.submit(xb, vb, hb, 6, r=R, skin=SKIN, dt=DT)
+        f1 = [f.copy() for f in h1.frames()]
+        f2 = [f.copy() for f in h2.frames()]
+        t1, t2 = h1.result(), h2.result()
+        svc_metrics = None  # snapshot after close (worker joined)
+    svc_metrics = svc.metrics()
+    assert len(f1) == 3 and len(f2) == 6
+    assert t1.shape == (3, 14, 3) and t2.shape == (6, 12, 3)
+    for t, (frames, traj) in enumerate([(f1, t1), (f2, t2)]):
+        for i, f in enumerate(frames):
+            np.testing.assert_array_equal(f, traj[i])
+    s1 = pipe.rollout(pipe.params, (xa, va, ha), 3, r=R, skin=SKIN, dt=DT,
+                      node_cap=16, edge_cap=256)
+    s2 = pipe.rollout(pipe.params, (xb, vb, hb), 6, r=R, skin=SKIN, dt=DT,
+                      node_cap=16, edge_cap=256)
+    np.testing.assert_array_equal(t1, s1.trajectory)
+    np.testing.assert_array_equal(t2, s2.trajectory)
+    # one coalesced batch of 2 real scenes in 4 slots
+    assert svc_metrics["occupancy_hist"] == {"2/4": 1}
+    assert svc_metrics["completed"] == 2
+    assert svc_metrics["program_cache"]["builds"] == 1
+    assert svc_metrics["latency_p50_s"] > 0
+
+
+def test_service_capacity_buckets_never_mix(pipe):
+    """Mixed scene sizes route to different buckets: separate batches,
+    separate compiled programs."""
+    with RolloutService(pipe, config=_svc_cfg(edge_cap_per_node=24)) as svc:
+        hs = []
+        for seed, n in [(0, 10), (1, 20), (2, 12), (3, 24)]:
+            x, v, h = _scene(n, seed=seed)
+            hs.append(svc.submit(x, v, h, 2, r=R, skin=SKIN, dt=DT))
+        trajs = [hd.result() for hd in hs]
+    m = svc.metrics()
+    assert [t.shape[1] for t in trajs] == [10, 20, 12, 24]
+    assert m["occupancy_hist"] == {"2/4": 2}     # two 2-scene batches
+    caps = sorted(k.node_cap for k in svc._programs.keys())
+    assert caps == [16, 32]
+    assert m["program_cache"]["builds"] == 2
+
+
+def test_service_lru_eviction_readmission_recompiles_once(pipe):
+    """engine_cache=1: admitting bucket B evicts bucket A's program;
+    re-admitting A rebuilds exactly once; steady-state re-use of the
+    resident program never builds."""
+    cfg = _svc_cfg(engine_cache=1, window_s=0.05)
+    small, big = _scene(10, seed=0), _scene(20, seed=1)
+
+    def one(svc, scene):
+        x, v, h = scene
+        return svc.submit(x, v, h, 2, r=R, skin=SKIN, dt=DT).result()
+
+    with RolloutService(pipe, config=cfg) as svc:
+        first = one(svc, small)
+        assert svc._programs.builds == 1
+        one(svc, small)                          # resident: no build
+        assert svc._programs.builds == 1
+        one(svc, big)                            # evicts the small program
+        assert svc._programs.builds == 2
+        again = one(svc, small)                  # re-admission: exactly one
+        assert svc._programs.builds == 3
+        one(svc, small)                          # steady state again
+        assert svc._programs.builds == 3
+    np.testing.assert_array_equal(first, again)  # eviction never drifts
+    assert svc.metrics()["program_cache"]["evictions"] == 2
+
+
+def test_service_queue_full_backpressure(pipe):
+    cfg = _svc_cfg(queue_cap=0)
+    with RolloutService(pipe, config=cfg) as svc:
+        x, v, h = _scene(10)
+        with pytest.raises(QueueFullError, match="backpressure"):
+            svc.submit(x, v, h, 2, r=R, skin=SKIN, dt=DT)
+    m = svc.metrics()
+    assert m["rejected"] == 1 and m["submitted"] == 0
+
+
+def test_service_rejects_malformed_and_oversized(pipe):
+    with RolloutService(pipe, config=_svc_cfg()) as svc:
+        x, v, h = _scene(10)
+        with pytest.raises(AdmissionError, match="non-finite"):
+            svc.submit(np.full_like(x, np.inf), v, h, 2, r=R, skin=SKIN,
+                       dt=DT)
+        xb, vb, hb = _scene(40)                  # beyond the (16, 32) ladder
+        with pytest.raises(AdmissionError, match="largest configured"):
+            svc.submit(xb, vb, hb, 2, r=R, skin=SKIN, dt=DT)
+        with pytest.raises(AdmissionError, match="n_steps"):
+            svc.submit(x, v, h, 0, r=R, skin=SKIN, dt=DT)
+
+
+# ------------------------------------------- pipeline engine-cache satellite
+def test_pipeline_rollout_engine_cache_is_bounded():
+    from repro.pipeline import ROLLOUT_ENGINE_CACHE
+
+    pipe = build_pipeline("egnn", jax.random.PRNGKey(1), h_in=1,
+                          n_layers=1, hidden=8)
+    st = _scene(8)
+    for i, ec in enumerate([200, 201, 202, 203, 204, 205]):
+        pipe.rollout(pipe.params, st, 1, r=R, skin=0.0, dt=DT,
+                     node_cap=8, edge_cap=ec)
+    rep = pipe.dispatch_report()["rollout_engine_cache"]
+    assert rep["capacity"] == ROLLOUT_ENGINE_CACHE
+    assert rep["size"] == ROLLOUT_ENGINE_CACHE   # bounded under churn
+    assert rep["evictions"] == 6 - ROLLOUT_ENGINE_CACHE
+    # the most recent key is resident: a repeat run hits the cache
+    hits = rep["hits"]
+    pipe.rollout(pipe.params, st, 1, r=R, skin=0.0, dt=DT,
+                 node_cap=8, edge_cap=205)
+    assert pipe.dispatch_report()["rollout_engine_cache"]["hits"] == hits + 1
