@@ -44,6 +44,9 @@ CLI::
                               # reuses one resident program (0 recompiles)
                               # and beats sequential singles by ≥ 1.2×
                               # (no-regression floor on 1-thread hosts)
+        [--gate-rebuild]      # exit 1 unless device rebuilds are bitwise
+                              # the host path with zero coordinate d2h,
+                              # zero edge/layout h2d and zero recompiles
         [--overlap D1,D2]     # record kind='overlap' schedule rows
         [--gate-overlap]      # exit 1 unless overlapped ≡ serialized and
                               # not slower beyond the timing slack
@@ -748,6 +751,77 @@ def run_rollout(sizes: tuple[int, ...] | None = None, steps: int = 40,
     return rows
 
 
+REBUILD_SIZES = (1024, 8192)
+
+
+def run_rebuild(sizes: tuple[int, ...] | None = None, steps: int = 30,
+                source: str = "kernel_bench") -> list[dict]:
+    """Host-vs-device Verlet rebuild rows (DESIGN.md §13).
+
+    Rolls the same scene through ``rebuild_mode='host'`` (synchronous
+    numpy rebuilds) and ``rebuild_mode='device'`` (jitted cell-list +
+    banded-layout rebuilds) and records ``kind='rebuild'`` rows: per-mode
+    rollout steps/s, mean per-rebuild latency, bitwise trajectory parity,
+    and the device-mode transfer accounting.  ``--gate-rebuild`` asserts
+    the PR-10 contract — device trajectories bitwise equal to host, with
+    the only remaining rollout d2h the per-chunk/per-rebuild scalar
+    fetches: ``coord_d2h_bytes == 0``, ``edge_h2d_bytes == 0`` and
+    ``recompiles == 0`` after warmup.
+    """
+    from repro.pipeline import build_pipeline
+
+    rows = []
+    for n in sizes or REBUILD_SIZES:
+        # the large size exists to prove the contract holds at scale, not
+        # to time many rebuilds — trim its horizon so the CPU-CI smoke
+        # (where the device build's big sorts run on one core) stays
+        # inside the job budget while still spanning several rebuilds
+        n_steps = steps if n <= 2048 else max(8, steps // 3)
+        rng = np.random.default_rng(0)
+        x0 = rng.uniform(0.0, 1.0, (n, 3)).astype(np.float32)
+        v0 = (0.01 * rng.standard_normal((n, 3))).astype(np.float32)
+        h = np.ones((n, 1), np.float32)
+        r = float((8 * 3.0 / (4.0 * np.pi * n)) ** (1.0 / 3.0))
+        pipe = build_pipeline("fast_egnn", jax.random.PRNGKey(0),
+                              n_layers=2, hidden=32, h_in=1, n_virtual=3,
+                              s_dim=16)
+        kw = dict(r=r, skin=0.5 * r, dt=0.01, drop_rate=0.25,
+                  edge_cap=32 * n, wrap_box=1.0)
+        res = {}
+        wall = {}
+        for mode, extra in (("host", dict(async_rebuild=False)),
+                            ("device", {})):
+            pipe.rollout(pipe.params, (x0, v0, h), 2,
+                         traj_capacity=n_steps,
+                         rebuild_mode=mode, **extra, **kw)
+            t0 = time.perf_counter()
+            res[mode] = pipe.rollout(pipe.params, (x0, v0, h), n_steps,
+                                     rebuild_mode=mode, **extra, **kw)
+            wall[mode] = time.perf_counter() - t0
+        rh, rd = res["host"], res["device"]
+        parity = bool(np.array_equal(rh.trajectory, rd.trajectory))
+        row = dict(
+            kind="rebuild", source=source, d=1, n=n, steps=n_steps,
+            parity=parity,
+            host_steps_per_s=n_steps / wall["host"],
+            device_steps_per_s=n_steps / wall["device"],
+            host_rebuilds=rh.rebuild_count,
+            device_rebuilds=rd.rebuild_count,
+            host_rebuild_ms=1e3 * rh.rebuild_s / max(1, rh.rebuild_count),
+            device_rebuild_ms=1e3 * rd.rebuild_s / max(1,
+                                                       rd.rebuild_count),
+            coord_d2h_bytes=rd.coord_d2h_bytes,
+            edge_h2d_bytes=rd.edge_h2d_bytes,
+            cell_overflows=rd.cell_overflows, recompiles=rd.recompiles,
+            chunk_calls=rd.chunk_calls)
+        rows.append(row)
+        emit(f"kernel/rebuild_n{n}", row["device_rebuild_ms"],
+             f"device_ms_per_rebuild;host={row['host_rebuild_ms']:.2f};"
+             f"parity={parity};coord_d2h={row['coord_d2h_bytes']};"
+             f"edge_h2d={row['edge_h2d_bytes']}")
+    return rows
+
+
 SERVING_SIZES = (1024, 8192)
 SERVING_SPEEDUP = 1.2
 # One hardware thread leaves batching nothing to exploit: the batched
@@ -936,6 +1010,14 @@ def main(argv: list[str] | None = None) -> int:
                         f"(≥ {SERVING_SERIAL_FLOOR}× no-regression floor "
                         "when the host has one hardware thread — nothing "
                         "to overlap) (CI gate, DESIGN.md §12)")
+    p.add_argument("--gate-rebuild", action="store_true",
+                   help="run host-vs-device Verlet rebuilds at "
+                        f"n={list(REBUILD_SIZES)} (kind='rebuild' rows: "
+                        "per-mode steps/s and rebuild latency) and exit 1 "
+                        "unless device trajectories are bitwise equal to "
+                        "host with zero coordinate d2h, zero edge/layout "
+                        "h2d and zero recompiles after warmup (CI gate, "
+                        "DESIGN.md §13)")
     p.add_argument("--overlap", type=str, default=None, metavar="D1,D2",
                    help="run the dist train step under both layer schedules "
                         "at these device counts and record kind='overlap' "
@@ -1023,6 +1105,25 @@ def main(argv: list[str] | None = None) -> int:
               f"n={[r['n'] for r in ro_rows if r['kind'] == 'rollout']} + "
               f"mesh D=2 — steady_d2h=0, recompiles=0, chunks≤2·rebuilds+2 "
               f"({[round(r['steps_per_s'], 1) for r in ro_rows]} steps/s)")
+
+    if args.gate_rebuild:
+        rb_rows = run_rebuild()
+        if merge_json is not None:
+            record_dist_rows(rb_rows, merge_json)
+        ok = rb_rows and all(
+            r["parity"] and r["coord_d2h_bytes"] == 0
+            and r["edge_h2d_bytes"] == 0 and r["recompiles"] == 0
+            for r in rb_rows)
+        if not ok:
+            print(f"GATE FAILED: device rebuilds diverged from host or "
+                  f"touched the host path: {rb_rows}")
+            return 1
+        print(f"GATE OK: device rebuilds bitwise == host at "
+              f"n={[r['n'] for r in rb_rows]} with zero coord d2h / edge "
+              f"h2d / recompiles "
+              f"({[round(r['device_rebuild_ms'], 1) for r in rb_rows]} ms "
+              f"vs host {[round(r['host_rebuild_ms'], 1) for r in rb_rows]}"
+              f" ms per rebuild)")
 
     if args.gate_serving:
         sv_rows = run_serving()

@@ -23,7 +23,18 @@ import numpy as np
 def radius_graph(x: np.ndarray, r: float, max_num_neighbors: int | None = None) -> tuple[np.ndarray, np.ndarray]:
     """All directed edges (i→j, i≠j) with ‖x_i−x_j‖ ≤ r.  Cell-list, O(N·deg).
 
-    Returns (senders, receivers) int32 arrays.
+    Returns (senders, receivers) int32 arrays in canonical
+    (receiver, sender) lexicographic order (``sort_edges_by_receiver`` on
+    the result is a no-op).  Fully vectorised: nodes are binned into cells
+    of side ``r`` via one flattened-key argsort, candidates gathered per
+    27-cell stencil with ``searchsorted`` range lookups — no Python loop
+    over cells, so clustered inputs that land in one cell no longer
+    degenerate to an O(N²) scan (DESIGN.md §13).
+
+    The distance cutoff is evaluated in ``x``'s dtype (f32 inputs compare
+    ``d² ≤ f32(r)²`` in f32) so the predicate is bitwise the one the
+    device-resident build (``data/cell_list.py``) and the rollout engine's
+    on-device drop mask apply.
     """
     n = x.shape[0]
     if n == 0:
@@ -33,37 +44,39 @@ def radius_graph(x: np.ndarray, r: float, max_num_neighbors: int | None = None) 
         snd = np.repeat(idx, n)
         rcv = np.tile(idx, n)
         keep = snd != rcv
-        return snd[keep].astype(np.int32), rcv[keep].astype(np.int32)
+        snd, rcv = snd[keep], rcv[keep]
+        order = np.lexsort((snd, rcv))
+        return snd[order].astype(np.int32), rcv[order].astype(np.int32)
 
-    cell = np.floor(x / r).astype(np.int64)
-    bucket_of: dict[tuple, np.ndarray] = {}
-    order = np.lexsort((cell[:, 2], cell[:, 1], cell[:, 0]))
-    sc = cell[order]
-    breaks = np.nonzero(np.any(np.diff(sc, axis=0) != 0, axis=1))[0] + 1
-    starts = np.concatenate([[0], breaks, [n]])
-    for b in range(len(starts) - 1):
-        members = order[starts[b] : starts[b + 1]]
-        bucket_of[tuple(sc[starts[b]])] = members
+    rt = np.asarray(x).dtype.type(r)
+    cell = np.floor(x / rt).astype(np.int64)
+    # Flatten 3-D cell coords to one sortable key over a grid padded by one
+    # ghost cell per face, so every stencil offset stays a valid key.
+    c = cell - cell.min(axis=0) + 1
+    dims = c.max(axis=0) + 2
+    key = (c[:, 0] * dims[1] + c[:, 1]) * dims[2] + c[:, 2]
+    order = np.argsort(key, kind="stable")
+    sk = key[order]
 
-    offsets = np.array(np.meshgrid([-1, 0, 1], [-1, 0, 1], [-1, 0, 1])).T.reshape(-1, 3)
-    snd_list, rcv_list = [], []
-    r2 = r * r
-    for ck, members in bucket_of.items():
-        neigh = []
-        for off in offsets:
-            cand = bucket_of.get((ck[0] + off[0], ck[1] + off[1], ck[2] + off[2]))
-            if cand is not None:
-                neigh.append(cand)
-        neigh = np.concatenate(neigh)
-        d2 = np.sum((x[members][:, None, :] - x[neigh][None, :, :]) ** 2, axis=-1)
-        ii, jj = np.nonzero(d2 <= r2)
-        s = neigh[jj]
-        t = members[ii]
-        keep = s != t
-        snd_list.append(s[keep])
-        rcv_list.append(t[keep])
-    snd = np.concatenate(snd_list) if snd_list else np.zeros(0, np.int64)
-    rcv = np.concatenate(rcv_list) if rcv_list else np.zeros(0, np.int64)
+    off = np.array([-1, 0, 1], np.int64)
+    off_flat = ((off[:, None, None] * dims[1] + off[None, :, None])
+                * dims[2] + off[None, None, :]).reshape(-1)
+    probe = key[:, None] + off_flat[None, :]  # (n, 27) neighbor-cell keys
+    lo = np.searchsorted(sk, probe, side="left")
+    hi = np.searchsorted(sk, probe, side="right")
+    cnt = (hi - lo).reshape(-1)
+    tot = int(cnt.sum())
+    # Expand the (n, 27) [lo, hi) runs into one flat candidate index list.
+    starts = lo.reshape(-1)
+    run0 = np.cumsum(cnt) - cnt
+    idx = np.repeat(starts - run0, cnt) + np.arange(tot)
+    cand = order[idx]
+    rcv = np.repeat(np.arange(n, dtype=np.int64), cnt.reshape(n, 27).sum(axis=1))
+    d2 = np.sum((x[cand] - x[rcv]) ** 2, axis=-1)
+    keep = (d2 <= rt * rt) & (cand != rcv)
+    snd, rcv = cand[keep], rcv[keep]
+    order = np.lexsort((snd, rcv))
+    snd, rcv = snd[order], rcv[order]
     if max_num_neighbors is not None and snd.size:
         # keep nearest max_num_neighbors per receiver
         d2 = np.sum((x[snd] - x[rcv]) ** 2, axis=-1)
@@ -230,6 +243,31 @@ def banded_csr_layout(
     )
 
 
+_TRUNCATION_WARNED: set[tuple[int, int]] = set()
+
+
+def reset_truncation_warnings() -> None:
+    """Re-arm the once-per-(capacity, overflow) truncation warning."""
+    _TRUNCATION_WARNED.clear()
+
+
+def warn_edge_truncation(e: int, capacity: int, how: str) -> None:
+    """Warn that ``e`` built edges exceeded ``capacity`` — once per
+    (capacity, overflow) pair, not per batch: at Fluid113K scale with a
+    tight ``edge_cap`` every sample overflows identically and a per-batch
+    warning is pure noise, while a *new* overflow magnitude at the same
+    capacity is real signal and warns again."""
+    sig = (int(capacity), int(e) - int(capacity))
+    if sig in _TRUNCATION_WARNED:
+        return
+    _TRUNCATION_WARNED.add(sig)
+    warnings.warn(
+        f"edge truncation: capacity {capacity} short by {e - capacity} "
+        f"edges ({e} built; {how} drop) — warning once per "
+        f"(capacity, overflow) pair",
+        stacklevel=3)
+
+
 def pad_edges(
     snd: np.ndarray, rcv: np.ndarray, capacity: int, x: np.ndarray | None = None
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -238,15 +276,15 @@ def pad_edges(
     Over capacity, the *longest* edges are dropped (consistent with the
     Sec. VII-B drop-longest semantics) when ``x`` is given; without
     coordinates the tail of the (receiver-sorted) edge list is dropped.
-    Either way truncation warns — silent capacity loss reads as "covered
-    every edge" when it didn't.
+    Truncation warns once per (capacity, overflow) pair
+    (:func:`warn_edge_truncation`) — silent capacity loss reads as
+    "covered every edge" when it didn't, but repeating the identical
+    warning every batch buries everything else.
     """
     e = snd.size
     if e > capacity:
-        warnings.warn(
-            f"pad_edges: truncating {e} edges to capacity {capacity} "
-            f"({'longest-first' if x is not None else 'tail-first'} drop)",
-            stacklevel=2)
+        warn_edge_truncation(
+            e, capacity, "longest-first" if x is not None else "tail-first")
         if x is not None:
             d2 = np.sum((x[snd] - x[rcv]) ** 2, axis=-1)
             keep = np.sort(np.argsort(d2, kind="stable")[:capacity])

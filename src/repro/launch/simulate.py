@@ -121,6 +121,9 @@ def main(argv=None) -> int:
     print(f"serving: queue wait {handle.queue_wait_s * 1e3:.1f}ms, "
           f"compute {m['compute_mean_s']:.2f}s, programs built "
           f"{cache['builds']} (cache {cache['size']}/{cache['capacity']})")
+    print(f"rebuilds: {m['rebuilds']} "
+          f"({m['rebuild_waits']} host-blocking), rebuild time "
+          f"{m.get('rebuild_mean_s', 0.0) * 1e3:.1f}ms/batch")
     print(f"trajectory span: |x| max {np.abs(tr).max():.3f}, "
           f"final-step mean displacement "
           f"{np.linalg.norm(tr[-1] - (tr[-2] if len(tr) > 1 else x0), axis=-1).mean():.4f}")

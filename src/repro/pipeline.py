@@ -238,7 +238,8 @@ class Pipeline:
                 async_rebuild: Optional[bool] = None,
                 partition: str = "random", seed: int = 0,
                 traj_capacity: Optional[int] = None,
-                wrap_box: Optional[float] = None):
+                wrap_box: Optional[float] = None,
+                rebuild_mode: str = "auto"):
         """Recursive prediction: feed the model its own output for
         ``n_steps`` steps, velocities re-estimated by finite differences
         at timestep ``dt`` — the sibling of :meth:`predict` for
@@ -248,9 +249,15 @@ class Pipeline:
         ``drop_rate`` are the model's graph semantics — identical to
         training; ``skin`` is an execution knob: the radius graph is
         built once at ``r + skin`` and reused on device until some node
-        moves more than ``skin/2``, with rebuilds running asynchronously
-        on the stream worker pool (``async_rebuild``, default on when
-        ``skin > 0``) while the still-valid list keeps stepping.  The
+        moves more than ``skin/2``.  ``rebuild_mode`` picks how stale
+        lists are rebuilt: ``'device'`` runs the jitted cell-list build
+        on the accelerator (no coordinate d2h / edge h2d — DESIGN.md
+        §13), ``'host'`` the numpy path, with rebuilds optionally
+        running asynchronously on the stream worker pool
+        (``async_rebuild``, default on when ``skin > 0``) while the
+        still-valid list keeps stepping; the default ``'auto'`` selects
+        ``'device'`` whenever eligible (finite ``r``, no explicit async
+        request).  Both modes produce bitwise-identical trajectories.  The
         trajectory is independent of ``skin`` (up to float ties at the
         cutoffs); ``skin=0`` rebuilds every step.  ``targets`` (optional
         ground-truth frames, one per step — short arrays raise) adds
@@ -274,7 +281,7 @@ class Pipeline:
         x0, v0, h = state0
         key = (self.mesh is None, float(r), float(skin), float(dt),
                float(drop_rate), node_cap, edge_cap, async_rebuild,
-               partition, seed, wrap_box)
+               partition, seed, wrap_box, rebuild_mode)
         eng = self._rollout_engines.get(key)
         if eng is None:
             if self.mesh is None:
@@ -284,14 +291,15 @@ class Pipeline:
                     edge_cap=edge_cap,
                     with_layout=bool(getattr(self.cfg, "use_kernel",
                                              False)),
-                    async_rebuild=async_rebuild, wrap_box=wrap_box)
+                    async_rebuild=async_rebuild, wrap_box=wrap_box,
+                    rebuild_mode=rebuild_mode)
             else:
                 eng = DistRolloutEngine(
                     self.apply_full, self.cfg, self.mesh, r=r,
                     skin=skin, dt=dt, drop_rate=drop_rate,
                     strategy=partition, seed=seed, n_cap=node_cap,
                     e_cap=edge_cap, async_rebuild=async_rebuild,
-                    wrap_box=wrap_box)
+                    wrap_box=wrap_box, rebuild_mode=rebuild_mode)
             self._rollout_engines.put(key, eng)
         return eng.run(params, x0, v0, h, n_steps, targets=targets,
                        traj_capacity=traj_capacity)

@@ -47,7 +47,10 @@ banded layouts (zero retraces, zero steady-state d2h, same contract).
 """
 from __future__ import annotations
 
+import time
+import warnings
 from dataclasses import dataclass, field
+from functools import partial
 from typing import Callable, Optional
 
 import jax
@@ -55,8 +58,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import GeometricGraph
+from repro.data.cell_list import (auto_cell_cap, cell_occupancy,
+                                  device_banded_layout, device_radius_build)
 from repro.data.radius_graph import (banded_csr_layout, pad_edges, pad_nodes,
-                                     radius_graph, sort_edges_by_receiver)
+                                     radius_graph, sort_edges_by_receiver,
+                                     warn_edge_truncation)
 
 Array = jax.Array
 
@@ -64,6 +70,30 @@ Array = jax.Array
 #: across rebuilds without a reshape (a breach truncates longest-first with
 #: a warning — ``pad_edges``)
 DEFAULT_EDGE_HEADROOM = 1.25
+
+_DIVERGED_MSG = ("rollout diverged: non-finite coordinates after step {} — "
+                 "train the model, shorten the horizon, or bound the "
+                 "dynamics with wrap_box")
+
+
+def _resolve_rebuild_mode(rebuild_mode: str, r_build: float,
+                          want_async: Optional[bool]) -> str:
+    """``'auto'`` → ``'device'`` when the cell list is eligible.
+
+    Eligibility: a finite positive build radius (``r = inf`` means a fully
+    connected graph — no cell structure to exploit).  An *explicit*
+    ``async_rebuild=True`` keeps the host path: device rebuilds are
+    synchronous jitted programs with nothing to overlap, so honoring the
+    async request means host mode (DESIGN.md §13).
+    """
+    if rebuild_mode not in ("auto", "device", "host"):
+        raise ValueError(f"rebuild_mode must be 'auto', 'device' or "
+                         f"'host', got {rebuild_mode!r}")
+    if rebuild_mode != "auto":
+        return rebuild_mode
+    if want_async is True or not (np.isfinite(r_build) and r_build > 0):
+        return "host"
+    return "device"
 
 
 @dataclass
@@ -81,6 +111,17 @@ class RolloutResult:
     capacities), and ``chunk_calls ≤ 2·rebuild_count + 2`` bounds the jit
     dispatch overhead.  ``rebuild_waits`` counts async rebuilds that were
     not finished when the stale-list budget ran out (the host blocked).
+
+    PR-10 (device rebuilds, DESIGN.md §13) tightens the contract:
+    ``rebuild_mode`` records which path rebuilt the Verlet lists,
+    ``coord_d2h_bytes`` counts coordinate fetches at rebuild boundaries
+    and ``edge_h2d_bytes`` counts host-built edge/layout uploads *after*
+    the first install — both exactly zero in ``'device'`` mode
+    (``cell_overflows`` counts capacity adaptations, which re-run the
+    rebuild on device without ever touching the host), where the only
+    remaining rollout d2h is per-chunk/per-rebuild scalar fetches plus
+    the final trajectory.  ``rebuild_s`` is host wall-time spent in
+    (blocking) rebuild installs.
     """
 
     trajectory: np.ndarray  # (n_steps, n, 3)
@@ -96,6 +137,11 @@ class RolloutResult:
     d2h_bytes: int = 0
     h2d_bytes: int = 0
     steady_state_d2h_bytes: int = 0
+    rebuild_mode: str = "host"
+    coord_d2h_bytes: int = 0
+    edge_h2d_bytes: int = 0
+    cell_overflows: int = 0
+    rebuild_s: float = 0.0
 
 
 def _nbytes(a) -> int:
@@ -119,20 +165,29 @@ class _Telemetry:
         self.d2h = 0
         self.h2d = 0
         self.steady_d2h = 0
+        self.coord_d2h = 0  # coordinate fetches at rebuild boundaries
+        self.edge_h2d = 0  # host-built edge/layout uploads
         self.d2h_fetches = 0
         self.traces = 0  # incremented at *trace time* in the jitted step
+        self.rebuild_traces = 0  # same, for the device rebuild program
 
-    def fetch(self, arr, steady: bool = False) -> np.ndarray:
+    def fetch(self, arr, steady: bool = False,
+              coords: bool = False) -> np.ndarray:
         out = np.asarray(arr)
         b = out.size * out.dtype.itemsize
         self.d2h += b
         self.d2h_fetches += 1
         if steady:
             self.steady_d2h += b
+        if coords:
+            self.coord_d2h += b
         return out
 
-    def uploaded(self, *arrays) -> None:
-        self.h2d += sum(_nbytes(a) for a in arrays)
+    def uploaded(self, *arrays, edges: bool = False) -> None:
+        b = sum(_nbytes(a) for a in arrays)
+        self.h2d += b
+        if edges:
+            self.edge_h2d += b
 
 
 def _step_edge_masks(x, snd, rcv, em, r2: float, p: float):
@@ -180,10 +235,23 @@ class RolloutEngine:
     of it, and ``skin=0`` degenerates to a synchronous rebuild-every-step
     oracle — the parity anchor ``tests/test_rollout.py`` pins.
 
-    ``async_rebuild`` (default: on whenever ``skin > 0``) submits rebuilds
-    at ``rebuild_margin`` of the skin budget to the shared stream worker
-    pool and keeps stepping on the still-valid list; see the module
-    docstring for the two-reference validity argument.
+    ``rebuild_mode`` selects where Verlet rebuilds run (DESIGN.md §13).
+    ``'device'`` (the ``'auto'`` default whenever ``r + skin`` is finite
+    and ``async_rebuild`` wasn't explicitly requested) rebuilds the edge
+    list *and* banded layout in a second jitted program
+    (``data/cell_list.py``) whose output is bitwise the host build at the
+    same capacities — zero coordinate d2h, zero edge/layout h2d, only
+    per-rebuild scalar flag fetches.  A cell-capacity overflow (density
+    drifted past ``cell_cap``) adapts ``cell_cap`` from the reported
+    occupancy and re-runs the retraced rebuild on the still-resident
+    coordinates — the host path is never touched.  ``'host'`` is the
+    PR-7 path:
+    numpy builds on the worker pool, with ``async_rebuild`` (default: on
+    whenever ``skin > 0``) submitting them at ``rebuild_margin`` of the
+    skin budget while the still-valid list keeps stepping; see the module
+    docstring for the two-reference validity argument.  Device rebuilds
+    are synchronous by construction (nothing to overlap), so
+    ``rebuild_mode='device'`` forces ``async_rebuild`` off.
 
     ``wrap_box`` applies periodic boundary conditions: each predicted
     position is wrapped into ``[0, wrap_box)^3`` *before* the
@@ -204,7 +272,9 @@ class RolloutEngine:
                  async_rebuild: Optional[bool] = None,
                  rebuild_margin: float = 0.5,
                  edge_headroom: float = DEFAULT_EDGE_HEADROOM, pool=None,
-                 wrap_box: Optional[float] = None):
+                 wrap_box: Optional[float] = None,
+                 rebuild_mode: str = "auto",
+                 cell_cap: Optional[int] = None):
         if skin < 0:
             raise ValueError(f"skin must be >= 0, got {skin}")
         if not 0 < rebuild_margin <= 1:
@@ -220,16 +290,23 @@ class RolloutEngine:
         self.rebuild_margin = float(rebuild_margin)
         self.edge_headroom = float(edge_headroom)
         self.wrap_box = None if wrap_box is None else float(wrap_box)
-        self.async_rebuild = (skin > 0 if async_rebuild is None
-                              else bool(async_rebuild))
+        self.rebuild_mode = _resolve_rebuild_mode(
+            rebuild_mode, self.r + self.skin, async_rebuild)
+        self.async_rebuild = (self.rebuild_mode == "host"
+                              and (skin > 0 if async_rebuild is None
+                                   else bool(async_rebuild)))
         self.with_layout = bool(with_layout)
         self._node_cap = node_cap
         self._edge_cap = edge_cap
         self._block_e = block_e
+        self._cell_cap = cell_cap
         self._pool = pool
         self._chunk = None
+        self._rebuild = None  # jitted device rebuild program
         self._traj_cap = 0
         self._tel = _Telemetry()
+        self._rebuild_s = 0.0
+        self._cell_overflows = 0
         # filled by the first build
         self._g: Optional[GeometricGraph] = None
         self._lay = None
@@ -258,7 +335,7 @@ class RolloutEngine:
         from repro.kernels.edge_message import layout_from_host
 
         self._tel.uploaded(build["senders"], build["receivers"],
-                           build["edge_mask"])
+                           build["edge_mask"], edges=True)
         self._g = self._g._replace(
             senders=jnp.asarray(build["senders"])[None],
             receivers=jnp.asarray(build["receivers"])[None],
@@ -266,9 +343,75 @@ class RolloutEngine:
         if self.with_layout:
             bcsr = build["layout"]
             self._tel.uploaded(bcsr.senders, bcsr.receivers, bcsr.edge_mask,
-                               bcsr.block_rwin, bcsr.block_swin)
+                               bcsr.block_rwin, bcsr.block_swin, edges=True)
             self._lay = jax.tree.map(lambda a: a[None],
                                      layout_from_host(bcsr))
+
+    # ---------------------------------------------------------- device side
+    def _build_rebuild(self) -> Callable:
+        """The second jitted program of device mode: cell-list edge build
+        + banded layout, bitwise the host ``_host_build`` products at the
+        pinned capacities (DESIGN.md §13).  Returns the device arrays plus
+        a 4-scalar flag vector — the only bytes that cross to the host."""
+        r_build = self.r + self.skin
+        edge_cap, cell_cap = self._edge_cap, self._cell_cap
+        node_cap = self._node_cap
+        with_layout = self.with_layout
+        window, swindow = self._window, self._swindow
+        block_e, lay_cap = self._block_e, self._lay_cap
+
+        def rebuild(x, nm):
+            self._tel.rebuild_traces += 1
+            db = device_radius_build(x, nm, r_build=r_build,
+                                     edge_cap=edge_cap, cell_cap=cell_cap)
+            lay = (device_banded_layout(
+                db.senders, db.receivers, db.edge_mask, n_nodes=node_cap,
+                window=window, swindow=swindow, block_e=block_e,
+                capacity=lay_cap) if with_layout else None)
+            flags = jnp.stack([
+                jnp.isfinite(x).all().astype(jnp.int32),
+                db.overflow.astype(jnp.int32), db.n_edges,
+                db.max_occupancy])
+            return db, lay, flags
+
+        return jax.jit(rebuild)
+
+    def _device_rebuild(self, x, step: int) -> None:
+        """One device-mode rebuild: run the jitted build on the carried
+        coordinates, fetch the 4-scalar flags, install.  A cell-capacity
+        /grid overflow never touches the host path: the flags carry the
+        exact max occupancy, so the engine adapts ``cell_cap``, retraces
+        only the small rebuild program, and re-runs it on the same
+        resident coordinates (``cell_cap`` is clamped at the node count,
+        so the loop terminates — a cell can never hold more nodes than
+        exist)."""
+        t0 = time.perf_counter()
+        if self._rebuild is None:
+            self._rebuild = self._build_rebuild()
+        db, lay, flags = self._rebuild(x, self._g.node_mask[0])
+        f = self._tel.fetch(flags)
+        if not f[0]:
+            raise FloatingPointError(_DIVERGED_MSG.format(step))
+        while f[1]:
+            # densest cell outgrew cell_cap (or the grid outgrew the int32
+            # key space): adapt and re-run on device — the coordinates
+            # never leave the accelerator
+            self._cell_overflows += 1
+            self._cell_cap = min(self._n_real,
+                                 max(auto_cell_cap(int(f[3])),
+                                     self._cell_cap + 1))
+            self._rebuild = self._build_rebuild()
+            db, lay, flags = self._rebuild(x, self._g.node_mask[0])
+            f = self._tel.fetch(flags)
+        if int(f[2]) > self._edge_cap:
+            warn_edge_truncation(int(f[2]), self._edge_cap,
+                                 "longest-first")
+        self._g = self._g._replace(
+            senders=db.senders[None], receivers=db.receivers[None],
+            edge_mask=db.edge_mask[None])
+        if self.with_layout:
+            self._lay = jax.tree.map(lambda a: a[None], lay)
+        self._rebuild_s += time.perf_counter() - t0
 
     def _first_build(self, x0, v0, h) -> tuple[Array, Array]:
         """Size the capacities, build the B=1 graph template, install the
@@ -284,20 +427,32 @@ class RolloutEngine:
         self._node_cap = int(self._node_cap or n)
         if self._block_e is None:
             self._block_e = EDGE_KERNEL_BLOCK_E
-        snd, rcv = radius_graph(np.asarray(x0), self.r + self.skin)
-        snd, rcv = sort_edges_by_receiver(snd, rcv)
+        device = self.rebuild_mode == "device"
+        # the engine state (and every rebuild) is f32 — building the first
+        # list from the same f32 coordinates keeps it bitwise identical
+        # across rebuild modes even for f64 inputs
+        x32 = np.asarray(x0, np.float32)
+        snd = rcv = None
         if self._edge_cap is None:
+            # sizing pass — host numpy, but in device mode its edges are
+            # never uploaded (the device rebuild installs the first list)
+            snd, rcv = radius_graph(x32, self.r + self.skin)
+            snd, rcv = sort_edges_by_receiver(snd, rcv)
             self._edge_cap = max(1, int(np.ceil(snd.size
                                                 * self.edge_headroom)))
         self._window, self._swindow, n_pad = pick_windows(self._node_cap)
         nw, nsw = n_pad // self._window, n_pad // self._swindow
         self._lay_cap = layout_capacity(self._edge_cap, nw, nsw,
                                         self._block_e)
+        if device and self._cell_cap is None:
+            # clamped at n: occupancy can never exceed the node count, so
+            # small scenes are overflow-proof by construction
+            self._cell_cap = min(n, auto_cell_cap(
+                cell_occupancy(x32, self.r + self.skin)))
 
-        xp, nm = pad_nodes(np.asarray(x0, np.float32), self._node_cap)
+        xp, nm = pad_nodes(x32, self._node_cap)
         vp, _ = pad_nodes(np.asarray(v0, np.float32), self._node_cap)
         hp, _ = pad_nodes(np.asarray(h, np.float32), self._node_cap)
-        sp, rp, em = pad_edges(snd, rcv, self._edge_cap, np.asarray(x0))
         self._tel.uploaded(xp, vp, hp, nm)
         self._g = GeometricGraph(
             x=jnp.asarray(xp)[None], v=jnp.asarray(vp)[None],
@@ -307,12 +462,20 @@ class RolloutEngine:
             edge_attr=jnp.zeros((1, self._edge_cap, 0), jnp.float32),
             node_mask=jnp.asarray(nm)[None],
             edge_mask=jnp.zeros((1, self._edge_cap), jnp.float32))
-        self._install(dict(
-            senders=sp, receivers=rp,
-            edge_mask=em, layout=(banded_csr_layout(
-                sp, rp, self._node_cap, edge_mask=em, window=self._window,
-                swindow=self._swindow, block_e=self._block_e,
-                capacity=self._lay_cap) if self.with_layout else None)))
+        if device:
+            self._device_rebuild(self._g.x[0], 0)
+        else:
+            if snd is None:
+                snd, rcv = radius_graph(x32, self.r + self.skin)
+                snd, rcv = sort_edges_by_receiver(snd, rcv)
+            sp, rp, em = pad_edges(snd, rcv, self._edge_cap, x32)
+            self._install(dict(
+                senders=sp, receivers=rp,
+                edge_mask=em, layout=(banded_csr_layout(
+                    sp, rp, self._node_cap, edge_mask=em,
+                    window=self._window, swindow=self._swindow,
+                    block_e=self._block_e, capacity=self._lay_cap)
+                    if self.with_layout else None)))
         return self._g.x[0], self._g.v[0]
 
     # ----------------------------------------------------------- device side
@@ -416,6 +579,10 @@ class RolloutEngine:
         base = (tel.d2h, tel.h2d, tel.steady_d2h)
         x, v = self._first_build(np.asarray(x0), np.asarray(v0),
                                  np.asarray(h))
+        # warmup boundary: coordinate-d2h / edge-h2d deltas count rebuild
+        # traffic only (the first install is the warmup the gate excludes)
+        base2 = (tel.coord_d2h, tel.edge_h2d, self._rebuild_s,
+                 self._cell_overflows)
         if self._chunk is None:
             self._chunk = self._build_chunk()
         n = self._n_real
@@ -449,29 +616,39 @@ class RolloutEngine:
                 break
             if pending is None:
                 trigger_steps.append(done)
-                x_np = tel.fetch(x)[:n]
+                if self.rebuild_mode == "device":
+                    # rebuild is a second jitted program on the carried
+                    # coordinates: no coordinate fetch, no edge upload —
+                    # only the 4-scalar flag vector crosses to the host
+                    # (divergence is checked from those flags)
+                    self._device_rebuild(x, done)
+                    x_ref = x
+                    rebuild_steps.append(done)
+                    continue
+                x_np = tel.fetch(x, coords=True)[:n]
                 if not np.isfinite(x_np).all():
                     # the skin criterion can never advance past NaN/Inf
                     # state (every displacement comparison is False), so
                     # without this check the loop would rebuild at the
                     # same positions forever
-                    raise FloatingPointError(
-                        f"rollout diverged: non-finite coordinates after "
-                        f"step {done} — train the model, shorten the "
-                        f"horizon, or bound the dynamics with wrap_box")
+                    raise FloatingPointError(_DIVERGED_MSG.format(done))
                 if self.async_rebuild:
                     if pool is None:
                         pool = self._pool or shared_worker_pool()
                     pending = (pool.submit(self._host_build, x_np), x)
                 else:
+                    t0 = time.perf_counter()
                     self._install(self._host_build(x_np))
+                    self._rebuild_s += time.perf_counter() - t0
                     x_ref = x
                     rebuild_steps.append(done)
             else:
                 fut, x_trig = pending
                 if not fut.done():
                     waits += 1  # budget ran out before the build landed
+                t0 = time.perf_counter()
                 self._install(fut.result())
+                self._rebuild_s += time.perf_counter() - t0
                 x_ref = x_trig
                 rebuild_steps.append(done)
                 pending = None
@@ -490,7 +667,12 @@ class RolloutEngine:
             recompiles=max(0, tel.traces - base_traces
                            - (1 if base_traces == 0 else 0)),
             d2h_bytes=tel.d2h - base[0], h2d_bytes=tel.h2d - base[1],
-            steady_state_d2h_bytes=tel.steady_d2h - base[2])
+            steady_state_d2h_bytes=tel.steady_d2h - base[2],
+            rebuild_mode=self.rebuild_mode,
+            coord_d2h_bytes=tel.coord_d2h - base2[0],
+            edge_h2d_bytes=tel.edge_h2d - base2[1],
+            cell_overflows=self._cell_overflows - base2[3],
+            rebuild_s=self._rebuild_s - base2[2])
 
 
 @dataclass
@@ -507,6 +689,14 @@ class BatchedRolloutResult:
     :class:`RolloutResult`: ``steady_state_d2h_bytes`` is structurally
     zero, ``recompiles`` counts chunk retraces after the first, and one
     rebuild covers *all* scenes (``rebuild_count`` is batch-global).
+
+    ``rebuild_waits`` counts rebuilds where the *host* blocked the batch
+    (batched rebuilds are synchronous, so in ``'host'`` mode every loop
+    rebuild is a wait; ``'device'`` mode never involves the host — a
+    ``cell_overflows`` adaptation re-runs the rebuild on device — so
+    device waits are zero).  ``coord_d2h_bytes`` / ``edge_h2d_bytes``
+    follow the :class:`RolloutResult` contract — zero in device mode
+    after warmup.
     """
 
     trajectories: list  # per real scene: (n_steps, n_j, 3) float32
@@ -520,6 +710,12 @@ class BatchedRolloutResult:
     d2h_bytes: int = 0
     h2d_bytes: int = 0
     steady_state_d2h_bytes: int = 0
+    rebuild_mode: str = "host"
+    rebuild_waits: int = 0
+    coord_d2h_bytes: int = 0
+    edge_h2d_bytes: int = 0
+    cell_overflows: int = 0
+    rebuild_s: float = 0.0
 
 
 class BatchedRolloutEngine:
@@ -561,7 +757,9 @@ class BatchedRolloutEngine:
                  node_cap: int, edge_cap: int, r: float, skin: float,
                  dt: float, drop_rate: float = 0.0,
                  with_layout: bool = False, block_e: Optional[int] = None,
-                 wrap_box: Optional[float] = None, pool=None):
+                 wrap_box: Optional[float] = None, pool=None,
+                 rebuild_mode: str = "auto",
+                 cell_cap: Optional[int] = None):
         if batch_size < 1:
             raise ValueError(f"batch_size must be >= 1, got {batch_size}")
         if skin < 0:
@@ -581,6 +779,8 @@ class BatchedRolloutEngine:
         self.drop_rate = float(drop_rate)
         self.with_layout = bool(with_layout)
         self.wrap_box = None if wrap_box is None else float(wrap_box)
+        self.rebuild_mode = _resolve_rebuild_mode(
+            rebuild_mode, self.r + self.skin, None)
         self._block_e = int(block_e or EDGE_KERNEL_BLOCK_E)
         self._window, self._swindow, n_pad = pick_windows(self.node_cap)
         nw, nsw = n_pad // self._window, n_pad // self._swindow
@@ -588,6 +788,10 @@ class BatchedRolloutEngine:
                                         self._block_e)
         self._pool = pool
         self._chunk = None
+        self._rebuild = None  # jitted (vmapped) device rebuild program
+        self._cell_cap = cell_cap
+        self._rebuild_s = 0.0
+        self._cell_overflows = 0
         self._traj_cap = 0
         self._tel = _Telemetry()
         self._g: Optional[GeometricGraph] = None
@@ -640,7 +844,7 @@ class BatchedRolloutEngine:
         snd = np.stack([builds[j]["senders"] for j in slot_src])
         rcv = np.stack([builds[j]["receivers"] for j in slot_src])
         em = np.stack([builds[j]["edge_mask"] for j in slot_src])
-        self._tel.uploaded(snd, rcv, em)
+        self._tel.uploaded(snd, rcv, em, edges=True)
         self._g = self._g._replace(
             senders=jnp.asarray(snd), receivers=jnp.asarray(rcv),
             edge_mask=jnp.asarray(em))
@@ -648,9 +852,79 @@ class BatchedRolloutEngine:
             for j in set(slot_src):
                 b = builds[j]["layout"]
                 self._tel.uploaded(b.senders, b.receivers, b.edge_mask,
-                                   b.block_rwin, b.block_swin)
+                                   b.block_rwin, b.block_swin, edges=True)
             lays = [layout_from_host(builds[j]["layout"]) for j in slot_src]
             self._lay = jax.tree.map(lambda *a: jnp.stack(a), *lays)
+
+    # ----------------------------------------------------------- device side
+    def _build_rebuild(self) -> Callable:
+        """Device rebuild for the whole batch: the single-scene cell-list
+        build vmapped over the scene axis (one program, one dispatch for
+        all ``batch_size`` slots)."""
+        r_build = self.r + self.skin
+        edge_cap, cell_cap = self.edge_cap, self._cell_cap
+        node_cap, with_layout = self.node_cap, self.with_layout
+        window, swindow = self._window, self._swindow
+        block_e, lay_cap = self._block_e, self._lay_cap
+
+        def one(x, nm):
+            db = device_radius_build(x, nm, r_build=r_build,
+                                     edge_cap=edge_cap, cell_cap=cell_cap)
+            flags = jnp.stack([
+                jnp.isfinite(x).all().astype(jnp.int32),
+                db.overflow.astype(jnp.int32), db.n_edges,
+                db.max_occupancy])
+            if with_layout:
+                lay = device_banded_layout(
+                    db.senders, db.receivers, db.edge_mask,
+                    n_nodes=node_cap, window=window, swindow=swindow,
+                    block_e=block_e, capacity=lay_cap)
+                return db, lay, flags
+            return db, flags
+
+        def rebuild(x, nm):
+            self._tel.rebuild_traces += 1
+            out = jax.vmap(one)(x, nm)
+            if with_layout:
+                return out
+            db, flags = out
+            return db, None, flags
+
+        return jax.jit(rebuild)
+
+    def _device_rebuild(self, x, step: int, ns: list) -> None:
+        """One batch-global device rebuild.  A cell overflow in *any*
+        scene adapts the shared ``cell_cap`` and re-runs the (retraced)
+        rebuild on the same resident coordinates — no scene ever
+        round-trips through the host, so device mode never blocks on a
+        ``rebuild_wait``."""
+        t0 = time.perf_counter()
+        if self._rebuild is None:
+            self._rebuild = self._build_rebuild()
+        db, lay, flags = self._rebuild(x, self._g.node_mask)
+        f = self._tel.fetch(flags)[:len(ns)]  # real scenes only
+        if not f[:, 0].all():
+            raise FloatingPointError(
+                f"batched rollout diverged: non-finite coordinates "
+                f"after step {step} — train the model, shorten the "
+                f"horizon, or bound the dynamics with wrap_box")
+        while f[:, 1].any():
+            self._cell_overflows += 1
+            self._cell_cap = min(self.node_cap,
+                                 max(auto_cell_cap(int(f[:, 3].max())),
+                                     self._cell_cap + 1))
+            self._rebuild = self._build_rebuild()
+            db, lay, flags = self._rebuild(x, self._g.node_mask)
+            f = self._tel.fetch(flags)[:len(ns)]
+        worst = int(f[:, 2].max())
+        if worst > self.edge_cap:
+            warn_edge_truncation(worst, self.edge_cap, "longest-first")
+        self._g = self._g._replace(
+            senders=db.senders, receivers=db.receivers,
+            edge_mask=db.edge_mask)
+        if self.with_layout:
+            self._lay = lay
+        self._rebuild_s += time.perf_counter() - t0
 
     # ----------------------------------------------------------- device side
     def _build_chunk(self) -> Callable:
@@ -770,8 +1044,20 @@ class BatchedRolloutEngine:
             node_mask=jnp.asarray(nmq),
             edge_mask=jnp.zeros((self.batch_size, self.edge_cap),
                                 jnp.float32))
-        self._install(self._build_scenes([xs[j][:ns[j]]
-                                          for j in range(n_real)]), slot_src)
+        device = self.rebuild_mode == "device"
+        scene_x0 = [xs[j][:ns[j]] for j in range(n_real)]
+        if device:
+            if self._cell_cap is None:
+                self._cell_cap = min(self.node_cap, auto_cell_cap(
+                    max(cell_occupancy(sx, self.r + self.skin)
+                        for sx in scene_x0)))
+            self._device_rebuild(self._g.x, 0, ns)
+        else:
+            self._install(self._build_scenes(scene_x0), slot_src)
+        # warmup boundary: the first install (and in device mode its
+        # rebuild-program trace) is setup cost, not steady rebuild traffic
+        base2 = (tel.coord_d2h, tel.edge_h2d, self._rebuild_s,
+                 self._cell_overflows)
         if self._chunk is None:
             self._chunk = self._build_chunk()
         self._traj_cap = max(self._traj_cap, n_steps, int(traj_capacity or 0))
@@ -783,6 +1069,7 @@ class BatchedRolloutEngine:
         ref = x
         done = 0
         chunk_calls = 0
+        waits = 0
         rebuild_steps: list[int] = []
         parts: list[np.ndarray] = []  # streamed frame blocks
         while done < n_steps:
@@ -798,14 +1085,22 @@ class BatchedRolloutEngine:
             done += k
             if done >= n_steps:
                 break
-            x_np = tel.fetch(x)
+            if device:
+                self._device_rebuild(x, done, ns)
+                ref = x
+                rebuild_steps.append(done)
+                continue
+            x_np = tel.fetch(x, coords=True)
             scene_x = [x_np[j, :ns[j]] for j in range(n_real)]
             if not all(np.isfinite(sx).all() for sx in scene_x):
                 raise FloatingPointError(
                     f"batched rollout diverged: non-finite coordinates "
                     f"after step {done} — train the model, shorten the "
                     f"horizon, or bound the dynamics with wrap_box")
+            t0 = time.perf_counter()
             self._install(self._build_scenes(scene_x), slot_src)
+            self._rebuild_s += time.perf_counter() - t0
+            waits += 1  # batched host rebuilds are always blocking
             ref = x
             rebuild_steps.append(done)
         if on_chunk is not None:
@@ -821,7 +1116,12 @@ class BatchedRolloutEngine:
             recompiles=max(0, tel.traces - base_traces
                            - (1 if base_traces == 0 else 0)),
             d2h_bytes=tel.d2h - base[0], h2d_bytes=tel.h2d - base[1],
-            steady_state_d2h_bytes=tel.steady_d2h - base[2])
+            steady_state_d2h_bytes=tel.steady_d2h - base[2],
+            rebuild_mode=self.rebuild_mode, rebuild_waits=waits,
+            coord_d2h_bytes=tel.coord_d2h - base2[0],
+            edge_h2d_bytes=tel.edge_h2d - base2[1],
+            cell_overflows=self._cell_overflows - base2[3],
+            rebuild_s=self._rebuild_s - base2[2])
 
 
 class DistRolloutEngine:
@@ -856,7 +1156,9 @@ class DistRolloutEngine:
                  async_rebuild: Optional[bool] = None,
                  rebuild_margin: float = 0.5,
                  edge_headroom: float = DEFAULT_EDGE_HEADROOM, pool=None,
-                 wrap_box: Optional[float] = None):
+                 wrap_box: Optional[float] = None,
+                 rebuild_mode: str = "auto",
+                 cell_cap: Optional[int] = None):
         if skin < 0:
             raise ValueError(f"skin must be >= 0, got {skin}")
         if not 0 < rebuild_margin <= 1:
@@ -877,10 +1179,17 @@ class DistRolloutEngine:
         self.rebuild_margin = float(rebuild_margin)
         self.edge_headroom = float(edge_headroom)
         self.wrap_box = None if wrap_box is None else float(wrap_box)
-        self.async_rebuild = (skin > 0 if async_rebuild is None
-                              else bool(async_rebuild))
+        self.rebuild_mode = _resolve_rebuild_mode(
+            rebuild_mode, self.r + self.skin, async_rebuild)
+        self.async_rebuild = (self.rebuild_mode == "host"
+                              and (skin > 0 if async_rebuild is None
+                                   else bool(async_rebuild)))
         self._n_cap = n_cap
         self._e_cap = e_cap
+        self._cell_cap = cell_cap
+        self._rebuild = None  # jitted shard_map device rebuild program
+        self._rebuild_s = 0.0
+        self._cell_overflows = 0
         self._pool = pool
         self._tel = _Telemetry()
         self._chunk = None
@@ -946,8 +1255,90 @@ class DistRolloutEngine:
     def _install(self, host: dict):
         from repro.distributed.dist_egnn import sharded_batch_to_device
 
-        self._tel.uploaded(*host.values())
+        edge_keys = {k for k in host
+                     if k in ("senders", "receivers", "edge_mask")
+                     or k.startswith("lay_")}
+        self._tel.uploaded(*(host[k] for k in edge_keys), edges=True)
+        self._tel.uploaded(*(v for k, v in host.items()
+                             if k not in edge_keys))
         return sharded_batch_to_device(host)
+
+    def _build_rebuild(self) -> Callable:
+        """Per-shard device rebuild under ``shard_map``: each shard runs
+        the cell-list build + banded layout on its frozen local subgraph
+        at the pinned (n_cap, e_cap) capacities; the 4-scalar flag vector
+        is ``pmax``-reduced so one replicated fetch covers every shard.
+        The layout call mirrors ``shard_layout_fields``'s host build
+        (``pick_windows`` defaults, ``EDGE_KERNEL_BLOCK_E``, capacity from
+        the padded edge count) — bitwise the same ``lay_*`` fields."""
+        from repro.core.message_passing import EDGE_KERNEL_BLOCK_E
+        from repro.distributed.dist_egnn import (GRAPH_AXIS, _shard_map,
+                                                 _SHARD_MAP_KW)
+        from jax.sharding import PartitionSpec as P
+
+        r_build = self.r + self.skin
+        e_cap, cell_cap, n_cap = self._e_cap, self._cell_cap, self._n_cap
+
+        def shard_rebuild(x, nm):
+            db = device_radius_build(x[0], nm[0], r_build=r_build,
+                                     edge_cap=e_cap, cell_cap=cell_cap)
+            lay = device_banded_layout(
+                db.senders, db.receivers, db.edge_mask, n_nodes=n_cap,
+                block_e=EDGE_KERNEL_BLOCK_E)
+            flags = jnp.stack([
+                (~jnp.isfinite(x).all()).astype(jnp.int32),
+                db.overflow.astype(jnp.int32), db.n_edges,
+                db.max_occupancy])
+            flags = jax.lax.pmax(flags, GRAPH_AXIS)
+            return (db.senders[None], db.receivers[None],
+                    db.edge_mask[None], lay.senders[None],
+                    lay.receivers[None], lay.edge_mask[None],
+                    lay.block_rwin[None], lay.block_swin[None], flags)
+
+        mapped = _shard_map(
+            shard_rebuild, mesh=self.mesh,
+            in_specs=(P(GRAPH_AXIS), P(GRAPH_AXIS)),
+            out_specs=(P(GRAPH_AXIS),) * 8 + (P(),), **_SHARD_MAP_KW)
+
+        def rebuild(x, nm):
+            self._tel.rebuild_traces += 1
+            return mapped(x, nm)
+
+        return jax.jit(rebuild)
+
+    def _device_rebuild(self, sb, x, step: int):
+        """One device-mode rebuild at the frozen assignment: swap the
+        per-shard edge + layout operands of ``sb`` in place — only the
+        pmax'd flag vector crosses to the host.  A cell/grid overflow on
+        any shard adapts the global ``cell_cap`` (the pmax'd flags carry
+        the worst shard's occupancy) and re-runs the retraced program on
+        the same resident coordinates — no gather, no host rebuild."""
+        t0 = time.perf_counter()
+        if self._rebuild is None:
+            self._rebuild = self._build_rebuild()
+        out = self._rebuild(x, sb.node_mask[:, 0])
+        f = self._tel.fetch(out[8])
+        if f[0]:
+            raise FloatingPointError(_DIVERGED_MSG.format(step))
+        while f[1]:
+            self._cell_overflows += 1
+            self._cell_cap = min(self._n_cap,
+                                 max(auto_cell_cap(int(f[3])),
+                                     self._cell_cap + 1))
+            self._rebuild = self._build_rebuild()
+            out = self._rebuild(x, sb.node_mask[:, 0])
+            f = self._tel.fetch(out[8])
+        if int(f[2]) > self._e_cap:
+            warn_edge_truncation(int(f[2]), self._e_cap,
+                                 "longest-first")
+        snd, rcv, em, ls, lr, lm, br, bw = out[:8]
+        sb = sb._replace(
+            senders=snd[:, None], receivers=rcv[:, None],
+            edge_mask=em[:, None], lay_senders=ls[:, None],
+            lay_receivers=lr[:, None], lay_edge_mask=lm[:, None],
+            lay_block_rwin=br[:, None], lay_block_swin=bw[:, None])
+        self._rebuild_s += time.perf_counter() - t0
+        return sb
 
     def _build_chunk(self) -> Callable:
         """One jitted shard_map program: per-shard while_loop with a
@@ -1059,7 +1450,16 @@ class DistRolloutEngine:
         tel = self._tel
         base = (tel.d2h, tel.h2d, tel.steady_d2h)
         h_np = np.asarray(h)
+        # the first install is host either way: it sizes e_cap and ships
+        # the initial state — warmup, not steady rebuild traffic
         sb = self._install(self._host_build(x0, np.asarray(v0), h_np))
+        if self.rebuild_mode == "device" and self._cell_cap is None:
+            x32 = np.asarray(x0, np.float32)
+            self._cell_cap = min(self._n_cap, auto_cell_cap(max(
+                (cell_occupancy(x32[idx], self.r + self.skin)
+                 for idx in self._idx if idx.size), default=1)))
+        base2 = (tel.coord_d2h, tel.edge_h2d, self._rebuild_s,
+                 self._cell_overflows)
         x, v = sb.x[:, 0], sb.v[:, 0]  # carried state, (D, n_cap, 3)
         if self._chunk is None:
             self._chunk = self._build_chunk()
@@ -1096,26 +1496,33 @@ class DistRolloutEngine:
                 break
             if pending is None:
                 trigger_steps.append(done)
-                xg, vg = self._gather(tel.fetch(x), tel.fetch(v), n)
+                if self.rebuild_mode == "device":
+                    sb = self._device_rebuild(sb, x, done)
+                    x_ref = x
+                    rebuild_steps.append(done)
+                    continue
+                xg, vg = self._gather(tel.fetch(x, coords=True),
+                                      tel.fetch(v, coords=True), n)
                 if not np.isfinite(xg).all():
-                    raise FloatingPointError(
-                        f"rollout diverged: non-finite coordinates after "
-                        f"step {done} — train the model, shorten the "
-                        f"horizon, or bound the dynamics with wrap_box")
+                    raise FloatingPointError(_DIVERGED_MSG.format(done))
                 if self.async_rebuild:
                     if pool is None:
                         pool = self._pool or shared_worker_pool()
                     pending = (pool.submit(self._host_build, xg, vg, h_np),
                                x)
                 else:
+                    t0 = time.perf_counter()
                     sb = self._install(self._host_build(xg, vg, h_np))
+                    self._rebuild_s += time.perf_counter() - t0
                     x_ref = x
                     rebuild_steps.append(done)
             else:
                 fut, x_trig = pending
                 if not fut.done():
                     waits += 1  # budget ran out before the build landed
+                t0 = time.perf_counter()
                 sb = self._install(fut.result())
+                self._rebuild_s += time.perf_counter() - t0
                 x_ref = x_trig
                 rebuild_steps.append(done)
                 pending = None
@@ -1137,7 +1544,12 @@ class DistRolloutEngine:
             recompiles=max(0, tel.traces - base_traces
                            - (1 if base_traces == 0 else 0)),
             d2h_bytes=tel.d2h - base[0], h2d_bytes=tel.h2d - base[1],
-            steady_state_d2h_bytes=tel.steady_d2h - base[2])
+            steady_state_d2h_bytes=tel.steady_d2h - base[2],
+            rebuild_mode=self.rebuild_mode,
+            coord_d2h_bytes=tel.coord_d2h - base2[0],
+            edge_h2d_bytes=tel.edge_h2d - base2[1],
+            cell_overflows=self._cell_overflows - base2[3],
+            rebuild_s=self._rebuild_s - base2[2])
 
     def _gather(self, x_sh: np.ndarray, v_sh: np.ndarray,
                 n: int) -> tuple[np.ndarray, np.ndarray]:

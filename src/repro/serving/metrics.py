@@ -45,6 +45,9 @@ class ServingMetrics:
         self.failed = 0
         self.batches = 0
         self.scenes = 0
+        self.rebuilds = 0       # Verlet-list rebuilds across batches
+        self.rebuild_waits = 0  # rebuilds where the host blocked the batch
+        self._rebuild_s = deque(maxlen=window)  # per-batch rebuild wall-time
 
     def record_submit(self) -> None:
         with self._lock:
@@ -55,12 +58,17 @@ class ServingMetrics:
             self.rejected += 1
 
     def record_batch(self, n_real: int, batch_size: int,
-                     compute_s: float) -> None:
+                     compute_s: float, *, rebuilds: int = 0,
+                     rebuild_waits: int = 0,
+                     rebuild_s: float = 0.0) -> None:
         with self._lock:
             self.batches += 1
             self.scenes += n_real
             self._occupancy[(n_real, batch_size)] += 1
             self._compute.append(compute_s)
+            self.rebuilds += rebuilds
+            self.rebuild_waits += rebuild_waits
+            self._rebuild_s.append(rebuild_s)
 
     def record_request(self, *, queue_wait_s: float, first_frame_s: float,
                        latency_s: float, done_t: float,
@@ -82,6 +90,7 @@ class ServingMetrics:
             qw = list(self._queue_wait)
             ff = list(self._first_frame)
             comp = list(self._compute)
+            reb = list(self._rebuild_s)
             done_t = list(self._done_t)
             occ = {f"{real}/{size}": count
                    for (real, size), count in sorted(self._occupancy.items())}
@@ -92,8 +101,13 @@ class ServingMetrics:
                 "failed": self.failed,
                 "batches": self.batches,
                 "scenes": self.scenes,
+                "rebuilds": self.rebuilds,
+                "rebuild_waits": self.rebuild_waits,
                 "occupancy_hist": occ,
             }
+        if reb:
+            snap["rebuild_mean_s"] = sum(reb) / len(reb)
+            snap["rebuild_p99_s"] = _percentile(reb, 99)
         if lat:
             span = max(done_t) - min(done_t) if len(done_t) > 1 else 0.0
             snap.update({

@@ -327,8 +327,9 @@ class RolloutService:
                         p.finished = True  # release the client early
                         p.handle._finish()
 
-            engine.run(self._params, [(p.x0, p.v0, p.h) for p in batch],
-                       horizon, on_chunk=on_chunk)
+            res = engine.run(self._params,
+                             [(p.x0, p.v0, p.h) for p in batch],
+                             horizon, on_chunk=on_chunk)
         except BaseException as exc:  # noqa: BLE001 — fail the whole batch
             now = self._clock()
             for p in batch:
@@ -342,7 +343,10 @@ class RolloutService:
             return
         t_done = self._clock()
         self._metrics.record_batch(len(batch), self.cfg.max_batch,
-                                   t_done - t_dispatch)
+                                   t_done - t_dispatch,
+                                   rebuilds=res.rebuild_count,
+                                   rebuild_waits=res.rebuild_waits,
+                                   rebuild_s=res.rebuild_s)
         for p in batch:
             if not p.finished:  # defensive: stream should have finished it
                 p.finished = True

@@ -1,0 +1,328 @@
+"""Device cell-list build parity tests (DESIGN.md §13).
+
+The contract under test: the jitted cell-list pipeline
+(``device_radius_build`` + ``device_banded_layout``) emits *bitwise* the
+host products — ``pad_edges(*sort_edges_by_receiver(*radius_graph(x,
+r)), cap, x)`` and ``layout_from_host(banded_csr_layout(...))`` — at the
+same capacities, across coordinate distributions, truncation, and
+drop-rate tie-breaks; and that ``rebuild_mode='device'`` rollouts are
+bitwise equal to ``'host'`` ones with zero coordinate d2h / edge h2d
+after warmup.
+"""
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data.cell_list import (auto_cell_cap, cell_occupancy,
+                                  device_banded_layout, device_radius_build)
+from repro.data.radius_graph import (banded_csr_layout, pad_edges,
+                                     radius_graph,
+                                     reset_truncation_warnings,
+                                     sort_edges_by_receiver,
+                                     warn_edge_truncation)
+from repro.pipeline import build_pipeline
+
+
+def _scene(n=24, seed=0):
+    rng = np.random.default_rng(seed)
+    x0 = rng.uniform(0.0, 1.0, (n, 3)).astype(np.float32)
+    v0 = (0.003 * rng.standard_normal((n, 3))).astype(np.float32)
+    h = np.ones((n, 1), np.float32)
+    return x0, v0, h
+
+
+@pytest.fixture(scope="module")
+def pipe():
+    return build_pipeline("egnn", jax.random.PRNGKey(0), h_in=1,
+                          n_layers=1, hidden=8)
+
+
+def _distributions(n=96):
+    rng = np.random.default_rng(7)
+    uniform = rng.uniform(0.0, 1.0, (n, 3)).astype(np.float32)
+    # clustered: everything inside one cell — the stencil degenerates
+    clustered = (0.05 * rng.random((n, 3))).astype(np.float32)
+    # skewed: a thin filament along one axis (occupancy varies wildly)
+    skewed = np.stack([rng.uniform(0, 10, n), 0.02 * rng.random(n),
+                       0.02 * rng.random(n)], axis=1).astype(np.float32)
+    # duplicates: exact ties in both position and distance
+    dup = uniform.copy()
+    dup[n // 2:] = dup[:n - n // 2]
+    return {"uniform": uniform, "clustered": clustered, "skewed": skewed,
+            "duplicates": dup}
+
+
+# ---------------------------------------------------------- host cell list
+def test_host_radius_graph_matches_bruteforce():
+    """The numpy cell-list rewrite returns exactly the O(N²) pair set in
+    canonical (receiver, sender) lex order."""
+    for name, x in _distributions(72).items():
+        for r in (0.05, 0.3, 1.5):
+            snd, rcv = radius_graph(x, r)
+            rt = x.dtype.type(r)
+            d2 = np.sum((x[None] - x[:, None]) ** 2, axis=-1)
+            keep = (d2 <= rt * rt) & ~np.eye(x.shape[0], dtype=bool)
+            brcv, bsnd = np.nonzero(keep)  # row-major == (rcv, snd) lex
+            assert np.array_equal(snd, bsnd.astype(snd.dtype)), (name, r)
+            assert np.array_equal(rcv, brcv.astype(rcv.dtype)), (name, r)
+
+
+def test_host_radius_graph_inf_radius():
+    x = _distributions(16)["uniform"]
+    snd, rcv = radius_graph(x, np.inf)
+    assert snd.size == 16 * 15
+    order = np.lexsort((snd, rcv))
+    assert np.array_equal(order, np.arange(snd.size))
+
+
+# -------------------------------------------------------- device vs host
+def _host_edges(x, r_build, edge_cap):
+    snd, rcv = radius_graph(x, r_build)
+    snd, rcv = sort_edges_by_receiver(snd, rcv)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        return pad_edges(snd, rcv, edge_cap, x)
+
+
+@pytest.mark.parametrize("dist", ["uniform", "clustered", "skewed",
+                                  "duplicates"])
+def test_device_build_bitwise_parity(dist):
+    x = _distributions()[dist]
+    n = x.shape[0]
+    r_build = 0.35
+    occ = cell_occupancy(x, r_build)
+    cap = min(n, auto_cell_cap(occ))
+    nm = np.ones(n, np.float32)
+    for edge_cap in (4096, 64):  # roomy and truncating
+        hs, hr, hm = _host_edges(x, r_build, edge_cap)
+        db = device_radius_build(jax.numpy.asarray(x), jax.numpy.asarray(nm),
+                                 r_build=r_build, edge_cap=edge_cap,
+                                 cell_cap=cap)
+        assert not bool(db.overflow), dist
+        assert np.array_equal(np.asarray(db.senders), hs), (dist, edge_cap)
+        assert np.array_equal(np.asarray(db.receivers), hr), (dist, edge_cap)
+        assert np.array_equal(np.asarray(db.edge_mask), hm), (dist, edge_cap)
+        # layout parity at the same canonical edge order
+        lay = device_banded_layout(db.senders, db.receivers, db.edge_mask,
+                                   n_nodes=n)
+        bcsr = banded_csr_layout(hs, hr, n, edge_mask=hm)
+        from repro.kernels.edge_message import layout_from_host
+        host_lay = layout_from_host(bcsr)
+        for f in ("senders", "receivers", "edge_mask", "block_rwin",
+                  "block_swin"):
+            assert np.array_equal(np.asarray(getattr(lay, f)),
+                                  np.asarray(getattr(host_lay, f))), (dist, f)
+        assert lay.meta == host_lay.meta
+
+
+def test_device_build_masked_rows_and_padding():
+    """Node-capacity padding rows never contribute edges or occupancy."""
+    x, _, _ = _scene(20, 3)
+    xp = np.zeros((32, 3), np.float32)
+    xp[:20] = x
+    nm = np.zeros(32, np.float32)
+    nm[:20] = 1.0
+    hs, hr, hm = _host_edges(x, 0.4, 512)
+    db = device_radius_build(jax.numpy.asarray(xp), jax.numpy.asarray(nm),
+                             r_build=0.4, edge_cap=512, cell_cap=20)
+    assert not bool(db.overflow)
+    assert np.array_equal(np.asarray(db.senders), hs)
+    assert np.array_equal(np.asarray(db.receivers), hr)
+    assert np.array_equal(np.asarray(db.edge_mask), hm)
+
+
+def test_device_build_overflow_flag():
+    """cell_cap below the true occupancy flags overflow instead of
+    silently dropping pairs."""
+    x = _distributions()["clustered"]
+    nm = np.ones(x.shape[0], np.float32)
+    db = device_radius_build(jax.numpy.asarray(x), jax.numpy.asarray(nm),
+                             r_build=0.35, edge_cap=4096, cell_cap=2)
+    assert bool(db.overflow)
+    assert int(db.max_occupancy) == cell_occupancy(x, 0.35)
+
+
+def test_device_build_huge_extent_grid():
+    """Coordinates spread over ~1e6·r still build on device: the cell
+    size grows with the extent instead of overflowing the int32 keys."""
+    rng = np.random.default_rng(11)
+    x = (1e6 * rng.standard_normal((64, 3))).astype(np.float32)
+    nm = np.ones(64, np.float32)
+    hs, hr, hm = _host_edges(x, 0.5, 256)
+    db = device_radius_build(jax.numpy.asarray(x), jax.numpy.asarray(nm),
+                             r_build=0.5, edge_cap=256, cell_cap=64)
+    assert not bool(db.overflow)
+    assert np.array_equal(np.asarray(db.senders), hs)
+    assert np.array_equal(np.asarray(db.edge_mask), hm)
+
+
+# ------------------------------------------------------ truncation warning
+def test_pad_edges_warns_once_per_capacity_overflow_pair():
+    x, _, _ = _scene(24, 5)
+    snd, rcv = radius_graph(x, 0.8)
+    snd, rcv = sort_edges_by_receiver(snd, rcv)
+    cap = snd.size // 2
+    reset_truncation_warnings()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        pad_edges(snd, rcv, cap, x)
+        pad_edges(snd, rcv, cap, x)  # same (capacity, overflow): silent
+    msgs = [str(x.message) for x in w]
+    assert len(msgs) == 1, msgs
+    assert f"capacity {cap}" in msgs[0]
+    assert f"short by {snd.size - cap} edges" in msgs[0]
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        warn_edge_truncation(snd.size, cap - 1, "longest-first")
+    assert len(w) == 1  # a different capacity warns again
+    reset_truncation_warnings()
+
+
+# ------------------------------------------------------------ engine parity
+def _run_pair(pipe, n_steps=20, drop_rate=0.3, wrap_box=None, skin=0.1,
+              **kw):
+    from repro.rollout.engine import RolloutEngine
+
+    x0, v0, h = _scene()
+    eh = RolloutEngine(pipe.predict_fn, r=0.5, skin=skin, dt=0.05,
+                       drop_rate=drop_rate, rebuild_mode="host",
+                       async_rebuild=False, wrap_box=wrap_box, **kw)
+    rh = eh.run(pipe.params, x0, v0, h, n_steps)
+    ed = RolloutEngine(pipe.predict_fn, r=0.5, skin=skin, dt=0.05,
+                       drop_rate=drop_rate, rebuild_mode="device",
+                       wrap_box=wrap_box, **kw)
+    rd = ed.run(pipe.params, x0, v0, h, n_steps)
+    return rh, rd, ed
+
+
+def test_engine_device_parity_and_telemetry(pipe):
+    rh, rd, ed = _run_pair(pipe, with_layout=True)
+    assert rd.rebuild_mode == "device"
+    assert np.array_equal(rh.trajectory, rd.trajectory)
+    assert rd.coord_d2h_bytes == 0
+    assert rd.edge_h2d_bytes == 0
+    assert rd.cell_overflows == 0
+    x0, v0, h = _scene()
+    rd2 = ed.run(pipe.params, x0, v0, h, rd.n_steps)
+    assert np.array_equal(rh.trajectory, rd2.trajectory)
+    assert rd2.recompiles == 0
+    assert rd2.coord_d2h_bytes == 0 and rd2.edge_h2d_bytes == 0
+
+
+def test_engine_device_parity_wrap_box(pipe):
+    rh, rd, _ = _run_pair(pipe, wrap_box=1.0)
+    assert np.array_equal(rh.trajectory, rd.trajectory)
+    assert rd.coord_d2h_bytes == 0 and rd.edge_h2d_bytes == 0
+
+
+def test_engine_skin0_rebuild_every_step_oracle(pipe):
+    """skin=0 rebuilds after every step — the strictest schedule: every
+    single rebuild must be bitwise the host's."""
+    rh, rd, _ = _run_pair(pipe, n_steps=10, skin=0.0)
+    assert rd.rebuild_count == 9
+    assert np.array_equal(rh.trajectory, rd.trajectory)
+
+
+def test_engine_overflow_adaptation_stays_bitwise(pipe):
+    """A deliberately tiny cell_cap forces overflow adaptations — the
+    trajectory must not change, and the retry runs on device (zero
+    coordinate d2h / edge h2d even through the overflow)."""
+    from repro.rollout.engine import RolloutEngine
+
+    x0, v0, h = _scene()
+    eh = RolloutEngine(pipe.predict_fn, r=0.5, skin=0.1, dt=0.05,
+                       drop_rate=0.3, rebuild_mode="host",
+                       async_rebuild=False)
+    rh = eh.run(pipe.params, x0, v0, h, 15)
+    ed = RolloutEngine(pipe.predict_fn, r=0.5, skin=0.1, dt=0.05,
+                       drop_rate=0.3, rebuild_mode="device", cell_cap=1)
+    rd = ed.run(pipe.params, x0, v0, h, 15)
+    assert np.array_equal(rh.trajectory, rd.trajectory)
+    # the warmup adaptation fired (excluded from the per-run delta) and
+    # grew cell_cap past the forced 1 — without any host traffic
+    assert ed._cell_overflows >= 1
+    assert ed._cell_cap > 1
+    assert rd.coord_d2h_bytes == 0 and rd.edge_h2d_bytes == 0
+    # the adapted capacity sticks: a re-run is overflow-free
+    rd2 = ed.run(pipe.params, x0, v0, h, 15)
+    assert np.array_equal(rh.trajectory, rd2.trajectory)
+    assert rd2.cell_overflows == 0 and rd2.coord_d2h_bytes == 0
+
+
+def test_engine_auto_mode_selection(pipe):
+    from repro.rollout.engine import RolloutEngine
+
+    assert RolloutEngine(pipe.predict_fn, r=0.5, skin=0.1,
+                         dt=0.05).rebuild_mode == "device"
+    assert RolloutEngine(pipe.predict_fn, r=np.inf, skin=0.0,
+                         dt=0.05).rebuild_mode == "host"
+    eng = RolloutEngine(pipe.predict_fn, r=0.5, skin=0.1, dt=0.05,
+                        async_rebuild=True)
+    assert eng.rebuild_mode == "host" and eng.async_rebuild
+    with pytest.raises(ValueError):
+        RolloutEngine(pipe.predict_fn, r=0.5, skin=0.1, dt=0.05,
+                      rebuild_mode="gpu")
+
+
+def test_batched_engine_device_parity(pipe):
+    from repro.rollout.engine import BatchedRolloutEngine
+
+    scenes = [_scene(20, 1)[:3], _scene(24, 2)[:3]]
+    kw = dict(batch_size=3, node_cap=24, edge_cap=600, r=0.5, skin=0.1,
+              dt=0.05, drop_rate=0.3, with_layout=True)
+    eh = BatchedRolloutEngine(pipe.predict_fn, rebuild_mode="host", **kw)
+    rh = eh.run(pipe.params, scenes, 15)
+    ed = BatchedRolloutEngine(pipe.predict_fn, rebuild_mode="device", **kw)
+    rd = ed.run(pipe.params, scenes, 15)
+    for a, b in zip(rh.trajectories, rd.trajectories):
+        assert np.array_equal(a, b)
+    assert rh.rebuild_waits == rh.rebuild_count  # host rebuilds block
+    assert rd.rebuild_waits == 0
+    assert rd.coord_d2h_bytes == 0 and rd.edge_h2d_bytes == 0
+    assert rd.cell_overflows == 0
+    rd2 = ed.run(pipe.params, scenes, 15)
+    assert all(np.array_equal(a, b)
+               for a, b in zip(rh.trajectories, rd2.trajectories))
+    assert rd2.recompiles == 0
+
+
+def test_dist_engine_device_parity_two_shards():
+    code = """
+    import numpy as np, jax
+    from repro.pipeline import build_pipeline
+    from repro.distributed.dist_egnn import make_gnn_mesh
+
+    rng = np.random.default_rng(0)
+    n = 24
+    x0 = rng.uniform(0.0, 1.0, (n, 3)).astype(np.float32)
+    v0 = (0.003 * rng.standard_normal((n, 3))).astype(np.float32)
+    h = np.ones((n, 1), np.float32)
+    pipe = build_pipeline("fast_egnn", jax.random.PRNGKey(0),
+                          mesh=make_gnn_mesh(2), h_in=1, n_layers=1,
+                          hidden=8, n_virtual=2, s_dim=8)
+    kw = dict(r=0.5, skin=0.1, dt=0.05, drop_rate=0.25)
+    rh = pipe.rollout(pipe.params, (x0, v0, h), 10, rebuild_mode="host",
+                      async_rebuild=False, **kw)
+    rd = pipe.rollout(pipe.params, (x0, v0, h), 10, rebuild_mode="device",
+                      **kw)
+    assert rd.rebuild_mode == "device"
+    assert np.array_equal(rh.trajectory, rd.trajectory)
+    assert rd.coord_d2h_bytes == 0 and rd.edge_h2d_bytes == 0
+    assert rd.cell_overflows == 0 and rd.recompiles == 0
+    print("OK", rd.rebuild_count)
+    """
+    import os
+    env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=2",
+           "PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+    env.update({k: v for k, v in os.environ.items()
+                if k not in env and k != "XLA_FLAGS"})
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         cwd="/root/repo")
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout
